@@ -1,0 +1,113 @@
+"""Paper §3 "solver translation" table: solvers written through the
+framework's @parallel engine vs hand-fused direct-jax implementations.
+
+The paper reports its translated CUDA-C solvers reach 90%/98% of the
+originals; here the "original" is a hand-written jax.jit step and the
+"translation" is the same physics through repro.core.parallel — the ratio
+measures the abstraction's overhead (expected ~1.0: both lower to XLA).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Grid, fd3d as fd, init_parallel_stencil, teff
+from repro.kernels import ref
+
+
+def bench_diffusion_translation(n: int = 96, iters: int = 10):
+    g = Grid((n,) * 3)
+    key = jax.random.PRNGKey(0)
+    T = jax.random.uniform(key, g.shape, jnp.float32)
+    Ci = jnp.full(g.shape, 0.5, jnp.float32)
+    dt = g.stable_diffusion_dt(2.0)
+    inv = g.inv_spacing
+
+    hand = jax.jit(lambda T2, T: ref.diffusion3d_step(T2, T, Ci, 1.0, dt, *inv))
+
+    ps = init_parallel_stencil(backend="jnp", ndims=3)
+
+    @ps.parallel(outputs=("T2",))
+    def kern(T2, T, Ci, lam, dt, _dx, _dy, _dz):
+        return {"T2": fd.inn(T) + dt * (lam * fd.inn(Ci) * (
+            fd.d2_xi(T) * _dx ** 2 + fd.d2_yi(T) * _dy ** 2 +
+            fd.d2_zi(T) * _dz ** 2))}
+
+    framework = jax.jit(lambda T2, T: kern(T2=T2, T=T, Ci=Ci, lam=1.0, dt=dt,
+                                           _dx=inv[0], _dy=inv[1], _dz=inv[2]))
+
+    mh = teff.measure(lambda: hand(T, T), iters=iters)
+    mf = teff.measure(lambda: framework(T, T), iters=iters)
+    return {
+        "hand_us": mh.median_s * 1e6,
+        "framework_us": mf.median_s * 1e6,
+        "translation_efficiency": mh.median_s / mf.median_s,
+    }
+
+
+def bench_gp_translation(n: int = 48, iters: int = 10):
+    g = Grid((n,) * 3, (8.0,) * 3)
+    key = jax.random.PRNGKey(1)
+    re = jax.random.uniform(key, g.shape, jnp.float32) * 0.1
+    im = jnp.zeros_like(re)
+    V = jnp.zeros_like(re)
+    inv2 = tuple(1.0 / d ** 2 for d in g.spacing)
+    dt = 0.2 * min(g.spacing) ** 2
+
+    def H_direct(f, re, im):
+        lap = ((f[2:, 1:-1, 1:-1] - 2 * f[1:-1, 1:-1, 1:-1] + f[:-2, 1:-1, 1:-1]) * inv2[0]
+               + (f[1:-1, 2:, 1:-1] - 2 * f[1:-1, 1:-1, 1:-1] + f[1:-1, :-2, 1:-1]) * inv2[1]
+               + (f[1:-1, 1:-1, 2:] - 2 * f[1:-1, 1:-1, 1:-1] + f[1:-1, 1:-1, :-2]) * inv2[2])
+        dens = re[1:-1, 1:-1, 1:-1] ** 2 + im[1:-1, 1:-1, 1:-1] ** 2
+        return -0.5 * lap + (V[1:-1, 1:-1, 1:-1] + 0.5 * dens) * f[1:-1, 1:-1, 1:-1]
+
+    @jax.jit
+    def hand(re, im):
+        re = re.at[1:-1, 1:-1, 1:-1].add(dt * H_direct(im, re, im))
+        im = im.at[1:-1, 1:-1, 1:-1].add(-dt * H_direct(re, re, im))
+        return re, im
+
+    ps = init_parallel_stencil(backend="jnp", ndims=3)
+
+    def H(f, re, im, _dx2, _dy2, _dz2):
+        lap = fd.d2_xi(f) * _dx2 + fd.d2_yi(f) * _dy2 + fd.d2_zi(f) * _dz2
+        dens = fd.inn(re) ** 2 + fd.inn(im) ** 2
+        return -0.5 * lap + (fd.inn(V) + 0.5 * dens) * fd.inn(f)
+
+    @ps.parallel(outputs=("re2",))
+    def step_re(re2, re, im, dt, _dx2, _dy2, _dz2):
+        return {"re2": fd.inn(re) + dt * H(im, re, im, _dx2, _dy2, _dz2)}
+
+    @ps.parallel(outputs=("im2",))
+    def step_im(im2, re, im, dt, _dx2, _dy2, _dz2):
+        return {"im2": fd.inn(im) - dt * H(re, re, im, _dx2, _dy2, _dz2)}
+
+    @jax.jit
+    def framework(re, im):
+        re = step_re(re2=re, re=re, im=im, dt=dt, _dx2=inv2[0], _dy2=inv2[1],
+                     _dz2=inv2[2])
+        im = step_im(im2=im, re=re, im=im, dt=dt, _dx2=inv2[0], _dy2=inv2[1],
+                     _dz2=inv2[2])
+        return re, im
+
+    mh = teff.measure(lambda: hand(re, im), iters=iters)
+    mf = teff.measure(lambda: framework(re, im), iters=iters)
+    return {
+        "hand_us": mh.median_s * 1e6,
+        "framework_us": mf.median_s * 1e6,
+        "translation_efficiency": mh.median_s / mf.median_s,
+    }
+
+
+def main():
+    d = bench_diffusion_translation()
+    print(f"solvers_diffusion_translation,{d['framework_us']:.1f},"
+          f"eff={d['translation_efficiency']:.3f}")
+    g = bench_gp_translation()
+    print(f"solvers_gp_translation,{g['framework_us']:.1f},"
+          f"eff={g['translation_efficiency']:.3f}")
+    return {"diffusion": d, "gp": g}
+
+
+if __name__ == "__main__":
+    main()

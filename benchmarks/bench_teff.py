@@ -1,0 +1,97 @@
+"""Paper Fig. 2 reproduction: T_eff of the 3-D heat diffusion solver.
+
+Rows mirror the paper's comparison:
+  * ``kernel``        — the fused stencil step (ParallelStencil analogue):
+                        jnp backend under jit (XLA-fused single pass); this
+                        is what runs on TPU via the Pallas kernel.
+  * ``broadcast``     — "array programming" baseline: the same update as a
+                        chain of unfused whole-array ops (op-by-op eager),
+                        the paper's CUDA.jl / Julia-broadcast comparison.
+  * ``pallas(interp)``— the Pallas TPU kernel in interpret mode (CPU
+                        correctness path; wall-time not meaningful, listed
+                        for completeness).
+
+T_eff = A_eff / t with A_eff = (1 write + 2 reads) * n * sizeof(f32): T2
+written, T and Ci read (the paper's counting for Fig. 1). T_peak for the
+CPU rows is a measured STREAM-copy bandwidth; the TPU v5e roofline fraction
+is *derived* in EXPERIMENTS.md §Roofline from the dry-run (no TPU here).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.diffusion3d import BENCH_128, BENCH_256, Diffusion3DConfig
+from repro.core import Grid, teff
+from repro.kernels import ops, ref
+
+
+def _setup(cfg: Diffusion3DConfig):
+    g = Grid(cfg.shape, (cfg.lx, cfg.ly, cfg.lz))
+    key = jax.random.PRNGKey(0)
+    T = jax.random.uniform(key, cfg.shape, jnp.float32) + 1.0
+    Ci = jnp.full(cfg.shape, 1.0 / cfg.c0, jnp.float32)
+    dt = g.stable_diffusion_dt(cfg.lam / cfg.c0)
+    return g, T, Ci, dt
+
+
+def bench(cfg: Diffusion3DConfig = BENCH_128, iters: int = 20):
+    g, T, Ci, dt = _setup(cfg)
+    inv = g.inv_spacing
+    a_eff = teff.a_eff(g.n_points, n_read=2, n_write=1, itemsize=4)
+    host_bw = teff.measure_host_bandwidth()
+    rows = []
+
+    # fused kernel (jit)
+    step = jax.jit(lambda T2, T: ref.diffusion3d_step(T2, T, Ci, cfg.lam, dt,
+                                                      *inv))
+    m = teff.measure(lambda: step(T, T), iters=iters)
+    rows.append(("kernel_jit", m, a_eff))
+
+    # broadcast baseline: op-by-op, unfused, materializing temporaries
+    def broadcast_step(T2, T):
+        d2x = (T[2:, 1:-1, 1:-1] - 2 * T[1:-1, 1:-1, 1:-1] + T[:-2, 1:-1, 1:-1])
+        d2x = d2x * inv[0] ** 2
+        d2y = (T[1:-1, 2:, 1:-1] - 2 * T[1:-1, 1:-1, 1:-1] + T[1:-1, :-2, 1:-1])
+        d2y = d2y * inv[1] ** 2
+        d2z = (T[1:-1, 1:-1, 2:] - 2 * T[1:-1, 1:-1, 1:-1] + T[1:-1, 1:-1, :-2])
+        d2z = d2z * inv[2] ** 2
+        lap = d2x + d2y + d2z
+        upd = T[1:-1, 1:-1, 1:-1] + dt * (cfg.lam * Ci[1:-1, 1:-1, 1:-1] * lap)
+        return T2.at[1:-1, 1:-1, 1:-1].set(upd)
+
+    with jax.disable_jit():
+        m = teff.measure(lambda: broadcast_step(T, T), iters=max(iters // 2, 5))
+    rows.append(("broadcast_eager", m, a_eff))
+
+    out = []
+    for name, m, a in rows:
+        t_eff = m.t_eff(a)
+        out.append({
+            "name": name, "n": cfg.nx,
+            "median_s": m.median_s,
+            "ci95_s": m.ci95_s,
+            "t_eff_GBs": t_eff / 1e9,
+            "host_bw_GBs": host_bw / 1e9,
+            "frac_of_host_peak": t_eff / host_bw,
+        })
+    return out
+
+
+def main(out_rows=None):
+    all_rows = []
+    for cfg in (BENCH_128, BENCH_256):
+        all_rows += bench(cfg)
+    speedup = all_rows[0]["t_eff_GBs"] / all_rows[1]["t_eff_GBs"]
+    for r in all_rows:
+        print(f"teff_{r['name']}_{r['n']},{r['median_s']*1e6:.1f},"
+              f"T_eff={r['t_eff_GBs']:.2f}GB/s frac={r['frac_of_host_peak']:.3f}")
+    print(f"teff_speedup_kernel_vs_broadcast_128,{speedup:.2f},x")
+    if out_rows is not None:
+        out_rows.extend(all_rows)
+    return all_rows
+
+
+if __name__ == "__main__":
+    main()

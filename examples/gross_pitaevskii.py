@@ -1,0 +1,73 @@
+"""Gross-Pitaevskii quantum-fluid solver (paper §4 cites this application).
+
+  i dpsi/dt = [ -1/2 lap + V(x) + g |psi|^2 ] psi
+
+Explicit leapfrog on (re, im) — two coupled stencil fields through the same
+@parallel engine as the diffusion solver; mass (integral |psi|^2) is the
+conservation diagnostic.
+
+    PYTHONPATH=src python examples/gross_pitaevskii.py [--n 48] [--nt 200]
+"""
+import argparse
+import sys
+
+import jax.numpy as jnp
+
+sys.path.insert(0, "src")
+
+from repro.core import Grid, FieldSet, fd3d as fd, init_parallel_stencil
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=48)
+    ap.add_argument("--nt", type=int, default=200)
+    ap.add_argument("--g", type=float, default=0.5, help="interaction")
+    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    args = ap.parse_args()
+
+    grid = Grid((args.n,) * 3, (8.0, 8.0, 8.0))
+    fs = FieldSet(grid)
+    xs = grid.meshgrid()
+    c = [l / 2 for l in grid.length]
+    r2 = sum((x - ci) ** 2 for x, ci in zip(xs, c))
+    V = 0.05 * r2                                  # harmonic trap
+    re = jnp.exp(-r2 / 4.0)                        # ground-state-ish blob
+    im = fs.zeros()
+    norm = jnp.sqrt(jnp.sum(re ** 2 + im ** 2))
+    re = re / norm
+
+    inv2 = tuple(1.0 / d ** 2 for d in grid.spacing)
+    dt = 0.2 * min(grid.spacing) ** 2              # explicit stability
+    ps = init_parallel_stencil(backend=args.backend, ndims=3)
+
+    def H(f, re, im, V, g, _dx2, _dy2, _dz2):
+        """(-1/2 lap + V + g|psi|^2) f, on the interior."""
+        lap = (fd.d2_xi(f) * _dx2 + fd.d2_yi(f) * _dy2 + fd.d2_zi(f) * _dz2)
+        dens = fd.inn(re) ** 2 + fd.inn(im) ** 2
+        return -0.5 * lap + (fd.inn(V) + g * dens) * fd.inn(f)
+
+    # symplectic (staggered) Euler: re with current im, im with NEW re —
+    # the leapfrog that keeps the Schroedinger flow norm-stable.
+    @ps.parallel(outputs=("re2",))
+    def step_re(re2, re, im, V, g, dt, _dx2, _dy2, _dz2):
+        return {"re2": fd.inn(re) + dt * H(im, re, im, V, g, _dx2, _dy2, _dz2)}
+
+    @ps.parallel(outputs=("im2",))
+    def step_im(im2, re, im, V, g, dt, _dx2, _dy2, _dz2):
+        return {"im2": fd.inn(im) - dt * H(re, re, im, V, g, _dx2, _dy2, _dz2)}
+
+    mass0 = float(jnp.sum(re ** 2 + im ** 2))
+    sc = dict(V=V, g=args.g, dt=dt, _dx2=inv2[0], _dy2=inv2[1], _dz2=inv2[2])
+    for it in range(args.nt):
+        re = step_re(re2=re, re=re, im=im, **sc)
+        im = step_im(im2=im, re=re, im=im, **sc)
+    mass = float(jnp.sum(re ** 2 + im ** 2))
+    drift = abs(mass - mass0) / mass0
+    print(f"GP: {args.nt} steps on {grid.shape} [{args.backend}] "
+          f"mass drift {drift:.2e} (explicit scheme, O(dt^2) per step)")
+    assert drift < 0.05, "mass not conserved — numerical instability"
+
+
+if __name__ == "__main__":
+    main()

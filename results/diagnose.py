@@ -1,0 +1,75 @@
+"""Per-collective breakdown of a dry-run cell: top wire-byte contributors
+with HLO metadata provenance (the §Perf 'profile')."""
+import os, sys, re, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax
+from repro import configs
+from repro.models import build, RunConfig
+from repro.distributed import sharding as shd
+from repro.launch import steps as steps_mod, mesh as mesh_mod, hlo_analysis as ha
+from repro.optim import adamw
+
+def compile_cell(arch, shape_name, rules=shd.DEFAULT_RULES, rc=None, save=None):
+    cfg = configs.get_arch(arch)
+    shape = configs.SHAPES[shape_name]
+    if rc is None:
+        size = cfg.d_model * cfg.n_layers
+        n_micro = 8 if size >= 512*1024 else (4 if size >= 64*1024 else 1)
+        rc = RunConfig(n_microbatch=n_micro)
+    model = build(cfg, rc)
+    mesh = mesh_mod.make_production_mesh()
+    if shape.mode == "train":
+        b = steps_mod.make_train_step(model, mesh, rules, adamw.AdamWConfig(),
+                                      shape.seq_len, shape.global_batch, n_micro=rc.n_microbatch)
+    elif shape.mode == "prefill":
+        b = steps_mod.make_prefill_step(model, mesh, rules, shape.seq_len, shape.global_batch)
+    else:
+        b = steps_mod.make_decode_step(model, mesh, rules, shape.seq_len, shape.global_batch)
+    with mesh:
+        comp = jax.jit(b.fn, in_shardings=b.in_shardings, out_shardings=b.out_shardings,
+                       donate_argnums=b.donate_argnums).lower(*b.abstract_inputs).compile()
+    t = comp.as_text()
+    if save:
+        open(save, "w").write(t)
+    return t, comp
+
+def diagnose(text, topk=12):
+    mc = ha.ModuleCost(text)
+    total = mc.cost()
+    # per-collective attribution with trip multipliers: walk again recording
+    rows = []
+    trips = {}
+    def walk(comp_name, mult):
+        comp = mc.comps.get(comp_name)
+        if comp is None: return
+        key = ("__visited__", comp_name, mult)
+        for i in comp.instrs:
+            if i.op == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", i.rest)
+                mt = ha._TRIP_CFG.search(i.rest)
+                trip = int(mt.group(1)) if mt else 1
+                if mb: walk(mb.group(1), mult*trip)
+            elif i.op in ("call", "conditional", "fusion"):
+                for m in ha._CALLS.finditer(i.rest):
+                    for nm in m.group(1).split(","):
+                        walk(nm.strip().lstrip("%"), mult)
+            if i.op in ha.COLLECTIVES and not i.op.endswith("-done"):
+                w = ha._coll_wire(i) * mult
+                md = re.search(r'op_name="([^"]*)"', i.rest)
+                rows.append((w, i.op, i.shape_str[:60], (md.group(1) if md else "")[:90]))
+    entry = mc.entry.name
+    walk(entry, 1)
+    rows.sort(reverse=True)
+    print(f"total flops {total.flops:.3e} bytes {total.bytes:.3e} wire {total.coll_wire:.3e}")
+    agg = {}
+    for w, op, sh, name in rows:
+        key = (op, name.split("/")[-1][:40] if name else sh)
+        agg[key] = agg.get(key, 0) + w
+    for (op, key), w in sorted(agg.items(), key=lambda kv: -kv[1])[:topk]:
+        print(f"  {w:12.3e}  {op:20s} {key}")
+    return total
+
+if __name__ == "__main__":
+    arch, shape = sys.argv[1], sys.argv[2]
+    t, comp = compile_cell(arch, shape, save=f"results/hlo_{arch}_{shape}_diag.txt")
+    diagnose(t)

@@ -1,0 +1,44 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax, re, collections, time
+from repro import configs
+from repro.models import build, RunConfig
+from repro.distributed import sharding as shd
+from repro.launch import steps as steps_mod, mesh as mesh_mod, hlo_analysis
+from repro.launch import roofline as rf
+from repro.optim import adamw
+
+def probe(arch, shape_name):
+    cfg = configs.get_arch(arch)
+    shape = configs.SHAPES[shape_name]
+    rc = RunConfig()
+    model = build(cfg, rc)
+    mesh = mesh_mod.make_production_mesh()
+    t0=time.time()
+    if shape.mode == "train":
+        b = steps_mod.make_train_step(model, mesh, shd.DEFAULT_RULES, adamw.AdamWConfig(), shape.seq_len, shape.global_batch)
+        mf = rf.model_flops_train(cfg, shape.seq_len, shape.global_batch)
+    elif shape.mode == "prefill":
+        b = steps_mod.make_prefill_step(model, mesh, shd.DEFAULT_RULES, shape.seq_len, shape.global_batch)
+        mf = rf.model_flops_prefill(cfg, shape.seq_len, shape.global_batch)
+    else:
+        b = steps_mod.make_decode_step(model, mesh, shd.DEFAULT_RULES, shape.seq_len, shape.global_batch)
+        mf = rf.model_flops_decode(cfg, shape.global_batch)
+    with mesh:
+        comp = jax.jit(b.fn, in_shardings=b.in_shardings, out_shardings=b.out_shardings,
+                       donate_argnums=b.donate_argnums).lower(*b.abstract_inputs).compile()
+    t = comp.as_text()
+    ops_h = collections.Counter(m.group(1) for m in re.finditer(r"=\s*(?:\([^=]*?\)|[\w\[\],{}]+?)\s+([\w\-]+)\(", t))
+    mc = hlo_analysis.ModuleCost(t).cost()
+    mem = comp.memory_analysis()
+    print(f"== {arch}/{shape_name}: compile {time.time()-t0:.0f}s")
+    print("   temp GiB:", getattr(mem, "temp_size_in_bytes", 0)/2**30)
+    print("   dot:", ops_h.get("dot",0), "custom-call:", ops_h.get("custom-call",0), "while:", ops_h.get("while",0))
+    for cc in set(re.findall(r'custom_call_target="([^"]+)"', t)): print("   cc target:", cc)
+    print(f"   analyzer flops/dev {mc.flops:.3e} want~{mf/256:.3e} bytes {mc.bytes:.3e} wire {mc.coll_wire:.3e}")
+    with open(f"/root/repo/results/hlo_{arch}_{shape_name}.txt", "w") as f:
+        f.write(t)
+
+probe("qwen2-72b", "train_4k")
+probe("moonshot-v1-16b-a3b", "decode_32k")
+probe("mamba2-130m", "train_4k")

@@ -1,0 +1,27 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, time, traceback
+from repro.launch.dryrun import run_cell
+CELLS = [
+    ("qwen2-72b", "train_4k", False),
+    ("mixtral-8x7b", "train_4k", False),
+    ("moonshot-v1-16b-a3b", "decode_32k", False),
+    ("seamless-m4t-medium", "prefill_32k", False),
+    ("seamless-m4t-medium", "decode_32k", False),
+    ("phi-3-vision-4.2b", "train_4k", False),
+    ("zamba2-1.2b", "long_500k", False),
+    ("mixtral-8x7b", "long_500k", False),
+    ("mamba2-130m", "train_4k", True),
+]
+for arch, shape, mp in CELLS:
+    t0 = time.time()
+    try:
+        rec = run_cell(arch, shape, mp)
+        r = rec.get("roofline", {})
+        print(f"OK {arch}/{shape}/{'multi' if mp else 'single'}: compile={rec['compile_s']}s "
+              f"dom={r.get('dominant')} tc={r.get('t_compute'):.4g} tm={r.get('t_memory'):.4g} "
+              f"tl={r.get('t_collective'):.4g} useful={r.get('useful_ratio'):.3f} "
+              f"temp={rec['memory'].get('temp_size_in_bytes',0)/2**30:.2f}GiB", flush=True)
+    except Exception as e:
+        print(f"FAIL {arch}/{shape}/{mp}: {e!r}", flush=True)
+        traceback.print_exc()

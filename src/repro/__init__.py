@@ -1,0 +1,3 @@
+"""repro — xPU stencil computations in JAX (ParallelStencil.jl reproduction)
+plus the multi-pod LM substrate it shares its distributed runtime with."""
+__version__ = "0.1.0"

@@ -1,0 +1,15 @@
+"""mamba2-130m [arXiv:2405.21060; unverified].
+
+24L d_model=768 attention-free, vocab=50280, ssm_state=128 (SSD).
+Attention-free -> long_500k runs; the paper's stencil technique applies
+directly (causal conv1d = 1-D stencil; see DESIGN.md §4).
+"""
+from ..models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-130m", family="ssm",
+    n_layers=24, d_model=768, n_heads=24, n_kv_heads=24,
+    d_ff=0, vocab=50280, ssm_state=128, ssm_head_dim=64, ssm_expand=2,
+    tie_embeddings=True,
+    notes="SSD; attention-free; long_500k runs",
+)

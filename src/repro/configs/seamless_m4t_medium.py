@@ -1,0 +1,15 @@
+"""seamless-m4t-medium [arXiv:2308.11596; hf].
+
+12L d_model=1024 16H (kv=16) d_ff=4096 vocab=256206 — encoder-decoder,
+multimodal. Frame frontend stubbed (precomputed frame embeddings); 12 enc +
+12 dec layers; decode shapes lower the *decoder* step with cross-attn cache.
+"""
+from ..models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="seamless-m4t-medium", family="encdec",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=4096, vocab=256206, n_enc_layers=12, n_dec_layers=12,
+    source_len=1024,
+    notes="enc-dec; frontend stub; full attention -> long_500k skipped",
+)

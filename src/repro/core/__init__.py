@@ -1,0 +1,12 @@
+"""Core stencil engine: the paper's contribution as a composable JAX module."""
+from .grid import Grid
+from .fields import FieldSet, VectorField
+from .fd import fd1d, fd2d, fd3d
+from .parallel import ParallelStencil, StencilKernel, init_parallel_stencil
+from . import boundary, teff
+
+__all__ = [
+    "Grid", "FieldSet", "VectorField", "fd1d", "fd2d", "fd3d",
+    "ParallelStencil", "StencilKernel", "init_parallel_stencil",
+    "boundary", "teff",
+]

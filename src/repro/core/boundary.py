@@ -1,0 +1,57 @@
+"""Boundary conditions for stencil fields.
+
+Functional counterparts of the boundary handling a ParallelStencil user
+writes as small ``@parallel_indices`` kernels. Each function returns a new
+array with the requested condition applied on the given faces.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+
+
+def _face(ndim: int, axis: int, side: int, depth: int = 1):
+    sl = [slice(None)] * ndim
+    sl[axis] = slice(0, depth) if side == 0 else slice(-depth, None)
+    return tuple(sl)
+
+
+def _inner_face(ndim: int, axis: int, side: int, depth: int = 1):
+    sl = [slice(None)] * ndim
+    sl[axis] = slice(depth, 2 * depth) if side == 0 else slice(-2 * depth, -depth)
+    return tuple(sl)
+
+
+def dirichlet(A: jnp.ndarray, value, axes: Sequence[int] | None = None, depth: int = 1):
+    """Fix boundary faces to ``value`` (scalar or broadcastable)."""
+    axes = range(A.ndim) if axes is None else axes
+    for ax in axes:
+        for side in (0, 1):
+            A = A.at[_face(A.ndim, ax, side, depth)].set(value)
+    return A
+
+
+def neumann0(A: jnp.ndarray, axes: Sequence[int] | None = None, depth: int = 1):
+    """Zero-flux: copy the first interior layer onto the boundary layer."""
+    axes = range(A.ndim) if axes is None else axes
+    for ax in axes:
+        for side in (0, 1):
+            A = A.at[_face(A.ndim, ax, side, depth)].set(
+                A[_inner_face(A.ndim, ax, side, depth)]
+            )
+    return A
+
+
+def periodic(A: jnp.ndarray, axes: Sequence[int] | None = None, depth: int = 1):
+    """Wrap: boundary layers mirror the opposite interior layers."""
+    axes = range(A.ndim) if axes is None else axes
+    for ax in axes:
+        n = A.shape[ax]
+        lo_src = [slice(None)] * A.ndim
+        hi_src = [slice(None)] * A.ndim
+        lo_src[ax] = slice(n - 2 * depth, n - depth)  # far interior -> low ghost
+        hi_src[ax] = slice(depth, 2 * depth)  # near interior -> high ghost
+        A = A.at[_face(A.ndim, ax, 0, depth)].set(A[tuple(lo_src)])
+        A = A.at[_face(A.ndim, ax, 1, depth)].set(A[tuple(hi_src)])
+    return A

@@ -1,0 +1,110 @@
+"""Cartesian grid description for stencil computations.
+
+Mirrors ParallelStencil's implicit convention: arrays carry their boundary
+points; stencil kernels update the interior (``@inn``) region only. A
+:class:`Grid` records the *global* array extent, physical spacing and the
+stencil halo width (radius) so that launch parameters, halo exchanges and
+T_eff accounting can all be derived from one object.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Grid:
+    """A structured grid with uniform spacing.
+
+    Attributes:
+      shape: global number of grid points per axis, boundary included
+        (the paper's ``nx, ny, nz``).
+      length: physical domain extent per axis (the paper's ``lx, ly, lz``).
+      radius: stencil halo width in points. 1 for 2nd-order FD.
+    """
+
+    shape: tuple[int, ...]
+    length: tuple[float, ...] = ()
+    radius: int = 1
+
+    def __post_init__(self):
+        object.__setattr__(self, "shape", tuple(int(s) for s in self.shape))
+        if not self.length:
+            object.__setattr__(self, "length", tuple(1.0 for _ in self.shape))
+        object.__setattr__(self, "length", tuple(float(l) for l in self.length))
+        if len(self.length) != len(self.shape):
+            raise ValueError(f"length {self.length} incompatible with shape {self.shape}")
+        if any(s < 2 * self.radius + 1 for s in self.shape):
+            raise ValueError(f"shape {self.shape} too small for radius {self.radius}")
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def spacing(self) -> tuple[float, ...]:
+        """Physical distance between adjacent points (``dx = lx/(nx-1)``)."""
+        return tuple(l / (s - 1) for l, s in zip(self.length, self.shape))
+
+    @property
+    def inv_spacing(self) -> tuple[float, ...]:
+        return tuple(1.0 / d for d in self.spacing)
+
+    @property
+    def n_points(self) -> int:
+        return int(np.prod(self.shape))
+
+    @property
+    def interior_shape(self) -> tuple[int, ...]:
+        return tuple(s - 2 * self.radius for s in self.shape)
+
+    @property
+    def interior_slice(self) -> tuple[slice, ...]:
+        r = self.radius
+        return tuple(slice(r, s - r) for s in self.shape)
+
+    def coords(self, dtype=jnp.float32) -> tuple[jnp.ndarray, ...]:
+        """Per-axis coordinate vectors (including boundary points)."""
+        return tuple(
+            jnp.linspace(0.0, l, s, dtype=dtype) for l, s in zip(self.length, self.shape)
+        )
+
+    def meshgrid(self, dtype=jnp.float32) -> tuple[jnp.ndarray, ...]:
+        return tuple(jnp.meshgrid(*self.coords(dtype), indexing="ij"))
+
+    def stable_diffusion_dt(self, diffusivity: float, safety: float = 6.1) -> float:
+        """The paper's explicit-diffusion time-step bound (Fig. 1, line 33)."""
+        return min(d ** 2 for d in self.spacing) / diffusivity / safety
+
+    def subgrid(self, factors: Sequence[int]) -> "Grid":
+        """Local grid for one rank of a block domain decomposition.
+
+        The local array keeps one halo layer of width ``radius`` on every
+        face (interior sizes must divide evenly).
+        """
+        if len(factors) != self.ndim:
+            raise ValueError("one decomposition factor per axis required")
+        r = self.radius
+        local = []
+        for s, f in zip(self.shape, factors):
+            inner = s - 2 * r
+            if inner % f:
+                raise ValueError(f"interior extent {inner} not divisible by {f}")
+            local.append(inner // f + 2 * r)
+        return Grid(tuple(local), tuple(l / f for l, f in zip(self.length, factors)), r)
+
+
+def volume_bytes(shape: Sequence[int], dtype) -> int:
+    return int(np.prod(shape)) * jnp.dtype(dtype).itemsize
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024.0 or unit == "TiB":
+            return f"{n:.2f} {unit}"
+        n /= 1024.0
+    return f"{n:.2f} TiB"

@@ -1,0 +1,163 @@
+"""`@parallel` — single-source xPU stencil kernels (the paper's C1/C2/C3).
+
+Usage, mirroring Fig. 1 of the paper::
+
+    from repro.core import parallel as P
+    from repro.core.fd import fd3d as fd
+
+    ps = P.init_parallel_stencil(backend="pallas", dtype="float32", ndims=3)
+
+    @ps.parallel(outputs=("T2",))
+    def step(T2, T, Ci, lam, dt, _dx, _dy, _dz):
+        return {"T2": fd.inn(T) + dt * (lam * fd.inn(Ci) * (
+            fd.d2_xi(T) * _dx**2 + fd.d2_yi(T) * _dy**2 + fd.d2_zi(T) * _dz**2))}
+
+    T2 = step(T2=T2, T=T, Ci=Ci, lam=lam, dt=dt, _dx=_dx, _dy=_dy, _dz=_dz)
+
+The same kernel source runs on every backend (the xPU property):
+
+  * ``backend="jnp"``    — the update is traced on full arrays and scattered
+    into the interior; XLA fuses the chain. This doubles as the paper's
+    "array programming" comparison baseline when called op-by-op unjitted.
+  * ``backend="pallas"`` — the update is traced on halo-extended VMEM
+    windows inside a fused Pallas TPU kernel with derived launch parameters
+    (kernels/stencil.py). On non-TPU hosts it validates via interpret mode.
+
+Arguments are classified by value: arrays of the kernel's dimensionality
+are *fields* (must share one shape), everything else is a *scalar*. Every
+name in ``outputs`` must be a field argument; its previous contents provide
+the boundary values (the paper's ``@inn(T2) = ...`` semantics).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import stencil as _stencil
+
+_BACKENDS = ("jnp", "pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelStencil:
+    """Backend/dtype/ndims context (the paper's ``@init_parallel_stencil``)."""
+
+    backend: str = "jnp"
+    dtype: Any = jnp.float32
+    ndims: int = 3
+    interpret: bool | None = None  # None -> auto (True unless on real TPU)
+
+    def __post_init__(self):
+        if self.backend not in _BACKENDS:
+            raise ValueError(f"backend must be one of {_BACKENDS}")
+        object.__setattr__(self, "dtype", jnp.dtype(self.dtype))
+
+    def parallel(
+        self,
+        outputs: Sequence[str],
+        radius: int = 1,
+        tile: Sequence[int] | None = None,
+        vmem_budget: int = _stencil.DEFAULT_VMEM_BUDGET,
+    ) -> Callable[[Callable], "StencilKernel"]:
+        def deco(fn: Callable) -> StencilKernel:
+            return StencilKernel(self, fn, tuple(outputs), radius, tile, vmem_budget)
+
+        return deco
+
+
+def init_parallel_stencil(
+    backend: str = "jnp", dtype: Any = jnp.float32, ndims: int = 3,
+    interpret: bool | None = None,
+) -> ParallelStencil:
+    return ParallelStencil(backend=backend, dtype=dtype, ndims=ndims, interpret=interpret)
+
+
+class StencilKernel:
+    """A compiled-on-first-use, shape-polymorphic stencil kernel."""
+
+    def __init__(self, ps: ParallelStencil, fn: Callable, outputs: tuple[str, ...],
+                 radius: int, tile, vmem_budget: int):
+        self.ps = ps
+        self.fn = fn
+        self.outputs = outputs
+        self.radius = radius
+        self.tile = tile
+        self.vmem_budget = vmem_budget
+        self._cache: dict = {}
+        functools.update_wrapper(self, fn)
+
+    # -- argument classification ------------------------------------------
+    def _split(self, kwargs: Mapping[str, Any]):
+        fields, scalars = {}, {}
+        for name, v in kwargs.items():
+            if hasattr(v, "ndim") and getattr(v, "ndim", 0) == self.ps.ndims:
+                fields[name] = v
+            else:
+                scalars[name] = v
+        if not fields:
+            raise ValueError("no field arguments found")
+        shapes = {np.shape(v) for v in fields.values()}
+        if len(shapes) != 1:
+            raise ValueError(f"fields must share one shape, got {shapes}")
+        for o in self.outputs:
+            if o not in fields:
+                raise ValueError(f"output {o!r} is not a field argument")
+        return fields, scalars, shapes.pop()
+
+    # -- backends -----------------------------------------------------------
+    def _run_jnp(self, fields, scalars):
+        updates = self.fn(**fields, **scalars)
+        r = self.radius
+        inner = tuple(slice(r, -r) for _ in range(self.ps.ndims))
+        return {
+            name: fields[name].at[inner].set(updates[name].astype(self.ps.dtype))
+            for name in self.outputs
+        }
+
+    def _run_pallas(self, fields, scalars, shape):
+        key = (shape, tuple(sorted(fields)), tuple(sorted(scalars)))
+        run = self._cache.get(key)
+        if run is None:
+            field_names = tuple(fields)
+            scalar_names = tuple(scalars)
+
+            def update(fdict, sdict):
+                return self.fn(**fdict, **sdict)
+
+            run = _stencil.build_stencil_call(
+                update,
+                field_names=field_names,
+                out_names=self.outputs,
+                scalar_names=scalar_names,
+                shape=shape,
+                radius=self.radius,
+                dtype=self.ps.dtype,
+                tile=self.tile,
+                vmem_budget=self.vmem_budget,
+                interpret=self.ps.interpret,
+            )
+            self._cache[key] = run
+        return run(fields, scalars)
+
+    def __call__(self, **kwargs):
+        fields, scalars, shape = self._split(kwargs)
+        if self.ps.backend == "pallas":
+            outs = self._run_pallas(fields, scalars, shape)
+        else:
+            outs = self._run_jnp(fields, scalars)
+        if len(self.outputs) == 1:
+            return outs[self.outputs[0]]
+        return outs
+
+    @property
+    def launch_info(self) -> dict:
+        """Derived launch parameters of compiled instances (for inspection)."""
+        return {
+            k: {"grid": v.grid, "block": v.block, "window_bytes": v.window_bytes}
+            for k, v in self._cache.items()
+        }

@@ -1,0 +1,103 @@
+"""T_eff — the paper's effective-memory-throughput performance model (C7).
+
+    T_eff = A_eff / t,     A_eff = n_IO * n_gridpoints * sizeof(eltype)
+
+where ``n_IO`` counts the arrays that *must* be read or written once per
+time step under perfect reuse (for the 3-D diffusion solver of Fig. 1:
+read T and Ci, write T2 -> n_IO = 3; the paper's canonical definition in
+Räss et al. 2022 [5] uses reads+writes of fields that change every step,
+i.e. A_eff = (2 * n_rw + n_r) * V; we expose both and use the explicit
+read/write counts everywhere).
+
+The fraction T_eff / T_peak is the memory-roofline fraction this repo
+reports as its §Perf score (the paper reaches 0.88 on P100 / 0.93 on A100).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Sequence
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_bw: float  # bytes/s, HBM/DRAM
+    peak_flops: float  # FLOP/s at the relevant precision
+    link_bw: float = 0.0  # bytes/s per ICI/NVLink link (for collective roofline)
+    hbm_bytes: float = 0.0
+
+    @property
+    def ridge_intensity(self) -> float:
+        return self.peak_flops / self.peak_bw
+
+
+# Hardware constants. TPU numbers are the task-specified v5e targets; the
+# GPU entries reproduce the paper's Fig. 2 reference hardware.
+TPU_V5E = HardwareSpec("TPU v5e", peak_bw=819e9, peak_flops=197e12, link_bw=50e9,
+                       hbm_bytes=16e9)
+A100_SXM4 = HardwareSpec("NVIDIA A100 SXM4", peak_bw=1355e9, peak_flops=312e12,
+                         link_bw=300e9, hbm_bytes=40e9)
+P100_PCIE = HardwareSpec("NVIDIA P100 PCIe", peak_bw=561e9, peak_flops=18.7e12,
+                         link_bw=16e9, hbm_bytes=16e9)
+
+
+def a_eff(n_points: int, n_read: int, n_write: int, itemsize: int) -> int:
+    """Effective bytes moved per step: each counted field crosses HBM once."""
+    return (n_read + n_write) * n_points * itemsize
+
+
+def t_eff(a_eff_bytes: float, seconds: float) -> float:
+    """Effective throughput in bytes/s."""
+    return a_eff_bytes / seconds
+
+
+def fraction(throughput: float, hw: HardwareSpec) -> float:
+    return throughput / hw.peak_bw
+
+
+@dataclasses.dataclass
+class Measurement:
+    median_s: float
+    ci95_s: tuple[float, float]
+    samples_s: list[float]
+
+    def t_eff(self, a_eff_bytes: float) -> float:
+        return t_eff(a_eff_bytes, self.median_s)
+
+
+def measure(fn: Callable[[], object], iters: int = 20, warmup: int = 3,
+            inner: int = 1) -> Measurement:
+    """Median wall time with a bootstrap 95% CI (paper Fig. 2 methodology:
+    medians of 20 samples with confidence interval)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            out = fn()
+        jax.block_until_ready(out)
+        samples.append((time.perf_counter() - t0) / inner)
+    med = float(np.median(samples))
+    rng = np.random.RandomState(0)
+    boots = [float(np.median(rng.choice(samples, size=len(samples)))) for _ in range(200)]
+    lo, hi = float(np.percentile(boots, 2.5)), float(np.percentile(boots, 97.5))
+    return Measurement(med, (lo, hi), samples)
+
+
+def measure_host_bandwidth(nbytes: int = 1 << 28) -> float:
+    """Rough STREAM-copy estimate of this host's achievable memory bandwidth,
+    used as T_peak for the CPU rows of the Fig. 2 reproduction."""
+    a = np.ones(nbytes // 8, dtype=np.float64)
+    b = np.empty_like(a)
+    t0 = time.perf_counter()
+    reps = 3
+    for _ in range(reps):
+        np.copyto(b, a)
+    dt = (time.perf_counter() - t0) / reps
+    return 2 * a.nbytes / dt  # read + write

@@ -1,0 +1,3 @@
+from . import tokens, physics
+from .tokens import DataConfig, make_source
+__all__ = ["tokens", "physics", "DataConfig", "make_source"]

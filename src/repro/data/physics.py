@@ -1,0 +1,47 @@
+"""Initial/boundary conditions for the PDE solvers (paper experiments)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core.grid import Grid
+
+
+def gaussian_hotspot(grid: Grid, amplitude: float = 1.0, width: float = 0.1,
+                     background: float = 0.0, dtype=jnp.float32):
+    """Centered Gaussian temperature anomaly."""
+    xs = grid.meshgrid(dtype)
+    c = [l / 2 for l in grid.length]
+    r2 = sum((x - ci) ** 2 for x, ci in zip(xs, c))
+    return background + amplitude * jnp.exp(-r2 / (2 * width ** 2))
+
+
+def random_porosity(key, grid: Grid, mean: float = 0.1, contrast: float = 2.0,
+                    dtype=jnp.float32):
+    """Smooth random porosity field for the two-phase flow solver."""
+    import jax
+
+    phi = jax.random.uniform(key, grid.shape, dtype)
+    # crude smoothing: 3 passes of nearest-neighbor averaging
+    for _ in range(3):
+        pad = jnp.pad(phi, 1, mode="edge")
+        acc = jnp.zeros_like(phi)
+        nd = phi.ndim
+        for ax in range(nd):
+            lo = tuple(slice(0, -2) if a == ax else slice(1, -1) for a in range(nd))
+            hi = tuple(slice(2, None) if a == ax else slice(1, -1) for a in range(nd))
+            acc = acc + pad[lo] + pad[hi]
+        phi = (phi + acc / (2 * nd)) / 2
+    return mean * (1 + contrast * (phi - phi.mean()))
+
+
+def vortex_wavefunction(grid: Grid, n_vortices: int = 2, dtype=jnp.complex64):
+    """Initial condition for the Gross-Pitaevskii solver: uniform condensate
+    with phase windings (quantized vortices) along z."""
+    xs = grid.meshgrid(jnp.float32)
+    cx, cy = grid.length[0] / 2, grid.length[1] / 2
+    phase = jnp.zeros(grid.shape, jnp.float32)
+    for i in range(n_vortices):
+        ox = cx + (i - (n_vortices - 1) / 2) * grid.length[0] / (n_vortices + 1)
+        phase = phase + jnp.arctan2(xs[1] - cy, xs[0] - ox)
+    amp = jnp.ones(grid.shape, jnp.float32)
+    return (amp * jnp.exp(1j * phase)).astype(dtype)

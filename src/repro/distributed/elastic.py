@@ -1,0 +1,71 @@
+"""Elastic scaling: re-laying out a training state onto a different mesh.
+
+A checkpoint written on one mesh must restore onto another (node failure
+shrinks the pool; scale-up grows it). Checkpoints store *global* logical
+tensors (shard files + a manifest, see checkpoint/manager.py), so restoring
+is: rebuild the sharding for the new mesh from the same logical rules, then
+``jax.device_put`` each tensor with its new NamedSharding. No tensor ever
+needs all-to-all resharding on device — the host stream feeds each device
+only its shard (jax.make_array_from_callback).
+
+Also provides `remesh` for live resharding (device_put with a new sharding)
+used when a run continues after swapping the mesh in-process.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def remesh(tree, mesh: Mesh, spec_tree) -> object:
+    """Reshard a pytree of arrays onto ``mesh`` with matching PartitionSpecs."""
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+    return jax.tree.map(put, tree, spec_tree)
+
+
+def from_host_callback(shape_dtype, spec: P, mesh: Mesh, read: Callable[[tuple], np.ndarray]):
+    """Build a sharded array where each device's block is fetched on demand
+    (``read(index)`` returns the numpy block for a global index tuple).
+    This is the restore path that scales to 1000+ nodes: every host reads
+    only the bytes its devices own."""
+    sharding = NamedSharding(mesh, spec)
+
+    def cb(index):
+        return read(index)
+
+    return jax.make_array_from_callback(shape_dtype.shape, sharding, cb)
+
+
+def validate_divisibility(tree_specs, tree_shapes, mesh: Mesh) -> list[str]:
+    """Return human-readable problems where a spec no longer divides a dim
+    on the new mesh (elastic scale-down can break divisibility)."""
+    problems = []
+
+    def check(path, spec, shape):
+        for i, entry in enumerate(spec):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            if shape[i] % size:
+                problems.append(f"{path}: dim {i} ({shape[i]}) % mesh {axes} ({size}) != 0")
+
+    def walk(prefix, specs, shapes):
+        if isinstance(specs, P):
+            check(prefix, specs, shapes)
+            return
+        if isinstance(specs, dict):
+            for k in specs:
+                walk(f"{prefix}/{k}", specs[k], shapes[k])
+            return
+        if isinstance(specs, (list, tuple)):
+            for i, (sp, sh) in enumerate(zip(specs, shapes)):
+                walk(f"{prefix}[{i}]", sp, sh)
+            return
+
+    walk("", tree_specs, tree_shapes)
+    return problems

@@ -1,0 +1,107 @@
+"""Fault tolerance and straggler mitigation for long multi-pod runs.
+
+Pieces that run *around* the jitted step (host-side control plane):
+
+  * StepMonitor — per-step wall-time EWMA + straggler flagging. On a real
+    multi-host deployment every host appends its step time to a heartbeat
+    file on shared storage; `check_peers` flags hosts whose EWMA exceeds
+    the fleet median by `straggler_factor` (the mitigation at scale is to
+    checkpoint + evict + elastic-restart, see elastic.py). Simulated
+    multi-host in tests by writing several heartbeat files.
+
+  * Heartbeat — liveness: a host that has not bumped its file within
+    `timeout_s` is declared dead -> the launcher triggers restore from the
+    last checkpoint on the surviving mesh.
+
+  * retry — transient-failure wrapper for host-side I/O (checkpoint
+    writes, data reads).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass
+class StepStats:
+    ewma_s: float = 0.0
+    n: int = 0
+    last_s: float = 0.0
+
+    def update(self, dt: float, alpha: float = 0.1) -> None:
+        self.last_s = dt
+        self.ewma_s = dt if self.n == 0 else (1 - alpha) * self.ewma_s + alpha * dt
+        self.n += 1
+
+
+class StepMonitor:
+    def __init__(self, host_id: int = 0, heartbeat_dir: Optional[str] = None,
+                 straggler_factor: float = 1.5, timeout_s: float = 300.0):
+        self.host_id = host_id
+        self.dir = heartbeat_dir
+        self.factor = straggler_factor
+        self.timeout_s = timeout_s
+        self.stats = StepStats()
+        if self.dir:
+            os.makedirs(self.dir, exist_ok=True)
+
+    def _path(self, host_id: int) -> str:
+        return os.path.join(self.dir, f"host_{host_id}.json")
+
+    def record(self, step: int, dt: float) -> None:
+        self.stats.update(dt)
+        if self.dir:
+            tmp = self._path(self.host_id) + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump({"step": step, "t": time.time(),
+                           "ewma_s": self.stats.ewma_s}, f)
+            os.replace(tmp, self._path(self.host_id))
+
+    def check_peers(self, now: Optional[float] = None) -> dict:
+        """Returns {"dead": [...], "stragglers": [...], "healthy": n}."""
+        now = time.time() if now is None else now
+        if not self.dir:
+            return {"dead": [], "stragglers": [], "healthy": 1}
+        beats = {}
+        for fn in os.listdir(self.dir):
+            if not (fn.startswith("host_") and fn.endswith(".json")):
+                continue
+            try:
+                with open(os.path.join(self.dir, fn)) as f:
+                    beats[int(fn[5:-5])] = json.load(f)
+            except (json.JSONDecodeError, ValueError, OSError):
+                continue  # torn write — treat as missing this round
+        dead = [h for h, b in beats.items() if now - b["t"] > self.timeout_s]
+        alive = {h: b for h, b in beats.items() if h not in dead}
+        if alive:
+            med = sorted(b["ewma_s"] for b in alive.values())[len(alive) // 2]
+            stragglers = [h for h, b in alive.items()
+                          if med > 0 and b["ewma_s"] > self.factor * med]
+        else:
+            stragglers = []
+        return {"dead": sorted(dead), "stragglers": sorted(stragglers),
+                "healthy": len(alive) - len(stragglers)}
+
+
+def retry(fn: Callable, attempts: int = 3, backoff_s: float = 0.1,
+          exceptions=(OSError, IOError)):
+    """Run fn(), retrying transient host-side failures with backoff."""
+    for i in range(attempts):
+        try:
+            return fn()
+        except exceptions:
+            if i == attempts - 1:
+                raise
+            time.sleep(backoff_s * (2 ** i))
+
+
+@dataclasses.dataclass
+class FailurePolicy:
+    """What the launcher does per health verdict (wired in launch/train.py)."""
+    checkpoint_every: int = 100
+    on_dead: str = "restore_elastic"   # restore last ckpt on surviving mesh
+    on_straggler: str = "flag"          # flag -> operator / scheduler eviction
+    max_restarts: int = 10

@@ -1,0 +1,99 @@
+"""Communication/computation overlap (the paper's ``@hide_communication``).
+
+ParallelStencil + ImplicitGlobalGrid hide the halo exchange behind the
+stencil update of the interior: the boundary-adjacent cells are computed
+in separate kernels once the halos arrive, while the bulk of the domain is
+updated concurrently with communication. That is what gave the paper >95%
+parallel efficiency on 1024 GPUs.
+
+On TPU/XLA the overlap is *dataflow-structured* rather than stream-
+structured: we build the program so that
+
+    bulk update      — depends only on stale-halo local data
+    halo ppermutes   — depend only on interior slabs
+    shell re-update  — depends on both
+
+and XLA's async collective-permute (start/done pairs) lets the bulk update
+execute between start and done. ``overlapped_step`` implements the generic
+pattern for any `StencilKernel`; tests assert bit-equality with the
+sequential exchange-then-update reference.
+
+The shell is recomputed per face from a slab of thickness ``3r`` (ghost r +
+shell r + support r): face slabs span the full extent of the other axes, so
+edge/corner cells are recomputed consistently by every adjacent face (the
+kernel is pure — last write wins with identical values).
+"""
+from __future__ import annotations
+
+from typing import Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core.parallel import StencilKernel
+from . import halo as _halo
+
+
+def _face_slab(arr, axis: int, side: int, thickness: int):
+    idx = [slice(None)] * arr.ndim
+    idx[axis] = slice(0, thickness) if side == 0 else slice(-thickness, None)
+    return arr[tuple(idx)]
+
+
+def _paste_shell(dst, src, axis: int, side: int, radius: int):
+    """Paste the shell ring (layers [r, 2r) from the face) of src into dst."""
+    r = radius
+    di = [slice(None)] * dst.ndim
+    si = [slice(None)] * dst.ndim
+    di[axis] = slice(r, 2 * r) if side == 0 else slice(-2 * r, -r)
+    si[axis] = slice(r, 2 * r) if side == 0 else slice(-2 * r, -r)
+    return dst.at[tuple(di)].set(src[tuple(si)])
+
+
+def sequential_step(
+    kernel: StencilKernel,
+    fields: Mapping[str, jax.Array],
+    scalars: Mapping[str, object],
+    exchange: Sequence[str],
+    mesh_axes: Sequence[str],
+    periodic=False,
+):
+    """Reference: exchange halos, then update. No overlap."""
+    r = kernel.radius
+    fresh = _halo.exchange_many(fields, exchange, mesh_axes, radius=r, periodic=periodic)
+    return kernel(**fresh, **scalars), fresh
+
+
+def overlapped_step(
+    kernel: StencilKernel,
+    fields: Mapping[str, jax.Array],
+    scalars: Mapping[str, object],
+    exchange: Sequence[str],
+    mesh_axes: Sequence[str],
+    periodic=False,
+):
+    """@hide_communication: bulk update overlaps the halo ppermutes.
+
+    Returns (updated_output, fresh_fields). Rank-local (inside shard_map).
+    Single-output kernels only (extend by returning dicts if needed).
+    """
+    r = kernel.radius
+    (out_name,) = kernel.outputs
+    nd = fields[out_name].ndim
+
+    # 1) launch halo exchange (independent subgraph)
+    fresh = _halo.exchange_many(fields, exchange, mesh_axes, radius=r, periodic=periodic)
+
+    # 2) bulk update with stale halos — correct except the shell ring
+    bulk = kernel(**fields, **scalars)
+
+    # 3) recompute the shell per face from fresh slabs and paste
+    thickness = 3 * r
+    for axis in range(min(len(mesh_axes), nd)):
+        for side in (0, 1):
+            slab_fields = {
+                n: _face_slab(v, axis, side, thickness) for n, v in fresh.items()
+            }
+            slab_out = kernel(**slab_fields, **scalars)
+            bulk = _paste_shell(bulk, slab_out, axis, side, r)
+    return bulk, fresh

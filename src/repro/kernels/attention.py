@@ -1,0 +1,108 @@
+"""Flash attention (forward) as a Pallas TPU kernel.
+
+Canonical TPU blocking: grid (batch, q_heads, q_blocks, k_blocks) with the
+k-block axis innermost/sequential; running (m, l, acc) statistics live in
+VMEM scratch across k-steps and the output block is finalized on the last
+k-step. GQA is expressed in the k/v BlockSpec index maps (kv head =
+q_head // group_size), causal and sliding-window masks via block iotas —
+same masking discipline as the stencil kernels' interior mask.
+
+Used for self-attention (Lq == Lk). Decode against a long cache is a
+different memory regime and is handled by ops.decode_attention (jnp) /
+the sequence-sharded flash-decoding path in distributed/sharding.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _body(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+          Bq, Bk, nk, scale, causal, window):
+    i, j = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[...][0, 0].astype(jnp.float32)  # (Bq, D)
+    k = k_ref[...][0, 0].astype(jnp.float32)  # (Bk, D)
+    v = v_ref[...][0, 0].astype(jnp.float32)  # (Bk, D)
+    s = jnp.dot(q, k.T) * scale  # (Bq, Bk)
+
+    qpos = i * Bq + jax.lax.broadcasted_iota(jnp.int32, (Bq, Bk), 0)
+    kpos = j * Bk + jax.lax.broadcasted_iota(jnp.int32, (Bq, Bk), 1)
+    mask = jnp.ones((Bq, Bk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_s[...][:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    l_new = l_s[...][:, 0] * alpha + jnp.sum(p, axis=-1)
+    acc_s[...] = acc_s[...] * alpha[:, None] + jnp.dot(p, v)
+    m_s[...] = m_new[:, None]
+    l_s[...] = l_new[:, None]
+
+    @pl.when(j == nk - 1)
+    def _fin():
+        l = l_s[...][:, 0]
+        safe = jnp.where(l > 0, l, 1.0)
+        o_ref[...] = (acc_s[...] / safe[:, None])[None, None].astype(o_ref.dtype)
+
+
+@functools.lru_cache(maxsize=64)
+def _build(B, Hq, Hkv, L, D, Bq, Bk, dtype_name, scale, causal, window, interpret):
+    dtype = jnp.dtype(dtype_name)
+    rep = Hq // Hkv
+    nk = L // Bk
+    body = functools.partial(_body, Bq=Bq, Bk=Bk, nk=nk, scale=scale,
+                             causal=causal, window=window)
+    return pl.pallas_call(
+        body,
+        grid=(B, Hq, L // Bq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, Bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, Bk, D), lambda b, h, i, j: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, Bk, D), lambda b, h, i, j: (b, h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, L, D), dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Bq, 1), jnp.float32),
+            pltpu.VMEM((Bq, 1), jnp.float32),
+            pltpu.VMEM((Bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+
+
+def flash_attention(q, k, v, causal=True, window=None, scale=None,
+                    block_q=128, block_k=128, interpret=None):
+    """q: (B, Hq, L, D), k/v: (B, Hkv, L, D) -> (B, Hq, L, D)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, Hq, L, D = q.shape
+    Hkv = k.shape[1]
+    scale = (D ** -0.5) if scale is None else scale
+    Bq, Bk = min(block_q, L), min(block_k, L)
+    while L % Bq:
+        Bq //= 2
+    while L % Bk:
+        Bk //= 2
+    call = _build(B, Hq, Hkv, L, D, max(Bq, 1), max(Bk, 1), q.dtype.name,
+                  float(scale), bool(causal), window, bool(interpret))
+    return call(q, k, v)

@@ -1,0 +1,122 @@
+"""Mamba2 SSD (state-space duality) chunk scan as a Pallas TPU kernel.
+
+The SSD algorithm (arXiv:2405.21060) splits the sequence into chunks; the
+within-chunk part is a decay-masked quadratic form (MXU-friendly matmuls)
+and the across-chunk part is a short recurrence on the (H, P, N) state.
+
+TPU mapping (DESIGN.md): the Pallas grid is (batch, chunks) with the chunk
+axis innermost — TPU grids execute sequentially, so the recurrent state
+lives in VMEM scratch and is carried *across grid steps*, exactly like the
+paper's `loopopt` register pipeline carries the z-column. One fused kernel
+therefore performs what the jnp reference needs a scan + 5 einsums for.
+
+Shapes (per call): x (B, L, H, P); dt (B, L, H) positive (post-softplus);
+A (H,) negative; Bm/Cm (B, L, H, N) (groups pre-broadcast to heads);
+D (H,) skip; h0 (B, H, P, N). L = nc * cs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _body(x_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, h0_ref, y_ref, hout_ref,
+          h_s, *, cs, nc):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        h_s[...] = h0_ref[...][0].astype(jnp.float32)
+
+    x = x_ref[...][0].astype(jnp.float32)    # (cs, H, P)
+    dt = dt_ref[...][0].astype(jnp.float32)  # (cs, H)
+    A = A_ref[...].astype(jnp.float32)       # (H,)
+    Bm = B_ref[...][0].astype(jnp.float32)   # (cs, H, N)
+    Cm = C_ref[...][0].astype(jnp.float32)   # (cs, H, N)
+    D = D_ref[...].astype(jnp.float32)       # (H,)
+
+    la = dt * A[None, :]                      # log decay per step (<= 0)
+    logcum = jnp.cumsum(la, axis=0)           # (cs, H); log s[t]
+    s = jnp.exp(logcum)
+    h_in = h_s[...]                           # (H, P, N)
+
+    # inter-chunk: y_inter[t] = s[t] * C[t] . h_in
+    y_inter = jnp.einsum("thn,hpn->thp", Cm, h_in) * s[..., None]
+
+    # intra-chunk: decay-masked quadratic form
+    cb = jnp.einsum("thn,uhn->tuh", Cm, Bm)   # (cs, cs, H)
+    ldiff = logcum[:, None, :] - logcum[None, :, :]  # log s[t]/s[u]
+    tri = (
+        jax.lax.broadcasted_iota(jnp.int32, (cs, cs), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (cs, cs), 1)
+    )
+    decay = jnp.exp(jnp.where(tri[..., None], ldiff, -1e30))  # mask pre-exp
+    w = cb * decay * dt[None, :, :]           # weight over source u
+    y = y_inter + jnp.einsum("tuh,uhp->thp", w, x) + x * D[None, :, None]
+    y_ref[...] = y[None].astype(y_ref.dtype)
+
+    # state update: h_out = s_last * h_in + sum_u (s_last/s[u]) dt[u] x[u] B[u]^T
+    s_last = jnp.exp(logcum[-1])              # (H,)
+    coeff = jnp.exp(logcum[-1][None, :] - logcum) * dt  # (cs, H)
+    dh = jnp.einsum("uh,uhp,uhn->hpn", coeff, x, Bm)
+    h_s[...] = h_in * s_last[:, None, None] + dh
+
+    @pl.when(c == nc - 1)
+    def _fin():
+        hout_ref[...] = h_s[...][None].astype(hout_ref.dtype)
+
+
+@functools.lru_cache(maxsize=64)
+def _build(B, L, H, P, N, cs, dtype_name, interpret):
+    nc = L // cs
+    dtype = jnp.dtype(dtype_name)
+    body = functools.partial(_body, cs=cs, nc=nc)
+    return pl.pallas_call(
+        body,
+        grid=(B, nc),
+        in_specs=[
+            pl.BlockSpec((1, cs, H, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, cs, H), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((H,), lambda b, c: (0,)),
+            pl.BlockSpec((1, cs, H, N), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, cs, H, N), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((H,), lambda b, c: (0,)),
+            pl.BlockSpec((1, H, P, N), lambda b, c: (b, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, cs, H, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, H, P, N), lambda b, c: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L, H, P), dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((H, P, N), jnp.float32)],
+        interpret=interpret,
+    )
+
+
+def ssd_chunk_scan(x, dt, A, Bm, Cm, D=None, h0=None, chunk: int = 64,
+                   interpret: bool | None = None):
+    """Fused SSD forward. Groups must be pre-broadcast to heads.
+
+    Returns (y (B,L,H,P), h_final (B,H,P,N) in f32).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, L, H, P = x.shape
+    N = Bm.shape[-1]
+    cs = min(chunk, L)
+    while L % cs:
+        cs //= 2
+    cs = max(cs, 1)
+    if D is None:
+        D = jnp.zeros((H,), x.dtype)
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    call = _build(B, L, H, P, N, cs, x.dtype.name, bool(interpret))
+    return call(x, dt, A, Bm, Cm, D, h0)

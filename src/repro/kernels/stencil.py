@@ -1,0 +1,208 @@
+"""Generic Pallas stencil kernel builder (the paper's C3/C4 on TPU).
+
+ParallelStencil's ``@parallel loopopt=true`` generates a CUDA kernel where a
+thread block stages a halo-extended tile of the input fields in shared
+memory/registers and sweeps it. The TPU-native equivalent built here:
+
+  * the Pallas *grid* tiles the full array; every input field gets a
+    **halo-extended VMEM window** expressed with ``pl.Element`` block
+    dimensions (element-indexed, overlapping windows with OOB padding) —
+    this is the BlockSpec realization of shared-memory blocking;
+  * the kernel body evaluates the *same math-close update function* the
+    ``jnp`` backend uses, on the window, producing the block-interior
+    update;
+  * a per-block interior mask blends the update with the output field's
+    previous (boundary) values, so one fused pass writes the full output
+    array — boundary handling costs no extra kernel;
+  * scalars ride in SMEM;
+  * launch parameters (grid + block shapes) are **derived automatically**
+    from the array bounds, stencil radius and a VMEM budget, mirroring
+    ParallelStencil's automatic launch-parameter derivation.
+
+Caveat (documented): the update function must not read an *output* field's
+halo ring (its window is only used as the boundary-copy source). All paper
+solvers satisfy this — e.g. Fig. 1's ``T2`` is write-only.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default VMEM working-set budget per kernel instance. v5e has 128 MiB of
+# VMEM per core; leave generous headroom for Pallas pipelining (double
+# buffering doubles the live window set) and spills.
+DEFAULT_VMEM_BUDGET = 8 << 20
+
+
+def _divisors_leq(n: int, cap: int) -> list[int]:
+    return [d for d in range(1, min(n, cap) + 1) if n % d == 0]
+
+
+def _pick_block(n: int, cap: int, align: int) -> int:
+    """Largest divisor of n that is <= cap, preferring multiples of align."""
+    divs = _divisors_leq(n, cap)
+    aligned = [d for d in divs if d % align == 0]
+    return (aligned or divs)[-1]
+
+
+def derive_launch(
+    shape: Sequence[int],
+    radius: int,
+    n_fields: int,
+    itemsize: int,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    tile: Sequence[int] | None = None,
+) -> tuple[tuple[int, ...], tuple[int, ...]]:
+    """Derive (grid, block_shape) from array bounds — ParallelStencil's
+    automatic launch-parameter derivation, with TPU tiling constraints.
+
+    The minor (last) axis prefers 128-lane multiples, the next-to-minor
+    8-sublane multiples. Blocks must divide the array extents (the caller
+    pads otherwise). The block set is shrunk until the halo-extended
+    windows of all fields fit the VMEM budget.
+    """
+    shape = tuple(int(s) for s in shape)
+    nd = len(shape)
+    if tile is not None:
+        block = tuple(int(b) for b in tile)
+        if len(block) != nd or any(s % b for s, b in zip(shape, block)):
+            raise ValueError(f"tile {block} must divide shape {shape}")
+    else:
+        caps = [256 if a == nd - 1 else (64 if a == nd - 2 else 16) for a in range(nd)]
+        aligns = [128 if a == nd - 1 else (8 if a == nd - 2 else 1) for a in range(nd)]
+        block = [
+            _pick_block(s, c, al) for s, c, al in zip(shape, caps, aligns)
+        ]
+
+        def window_bytes(blk):
+            return n_fields * math.prod(b + 2 * radius for b in blk) * itemsize
+
+        # Shrink the largest non-minor axis first; keep lane alignment longest.
+        while window_bytes(block) > vmem_budget:
+            cands = sorted(range(nd), key=lambda a: (a == nd - 1, -block[a]))
+            for a in cands:
+                smaller = [d for d in _divisors_leq(shape[a], block[a] - 1)]
+                if smaller:
+                    block[a] = smaller[-1]
+                    break
+            else:
+                break  # cannot shrink further; let it ride
+        block = tuple(block)
+    grid = tuple(s // b for s, b in zip(shape, block))
+    return grid, block
+
+
+def _interior_mask(block: tuple[int, ...], shape: tuple[int, ...], radius: int):
+    """Boolean mask over this block marking globally-interior cells."""
+    nd = len(block)
+    m = None
+    for a in range(nd):
+        pid = pl.program_id(a)
+        g = pid * block[a] + jax.lax.broadcasted_iota(jnp.int32, block, a)
+        ma = (g >= radius) & (g < shape[a] - radius)
+        m = ma if m is None else (m & ma)
+    return m
+
+
+def build_stencil_call(
+    update_fn: Callable[[Mapping[str, jax.Array], Mapping[str, jax.Array]], Mapping[str, jax.Array]],
+    *,
+    field_names: Sequence[str],
+    out_names: Sequence[str],
+    scalar_names: Sequence[str],
+    shape: Sequence[int],
+    radius: int,
+    dtype,
+    tile: Sequence[int] | None = None,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    interpret: bool | None = None,
+) -> Callable[..., dict[str, jax.Array]]:
+    """Build a fused Pallas stencil step.
+
+    ``update_fn(fields, scalars) -> {out_name: interior_update}`` is traced
+    on halo-extended VMEM windows. Returns ``run(fields, scalars)`` mapping
+    full arrays -> dict of full output arrays.
+    """
+    shape = tuple(int(s) for s in shape)
+    nd = len(shape)
+    dtype = jnp.dtype(dtype)
+    field_names = tuple(field_names)
+    out_names = tuple(out_names)
+    scalar_names = tuple(scalar_names)
+    for o in out_names:
+        if o not in field_names:
+            raise ValueError(
+                f"output {o!r} must also be an input field (boundary-copy source)"
+            )
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    grid, block = derive_launch(
+        shape, radius, len(field_names), dtype.itemsize, vmem_budget, tile
+    )
+    r = radius
+    win = tuple(
+        pl.Element(b + 2 * r, padding=(r, r)) for b in block
+    )
+
+    def in_index_map(*pids):
+        return tuple(pid * b for pid, b in zip(pids, block))
+
+    def out_index_map(*pids):
+        return pids
+
+    n_s, n_f = len(scalar_names), len(field_names)
+    center = tuple(slice(r, r + b) for b in block)
+
+    def body(*refs):
+        scal_refs = refs[:n_s]
+        in_refs = refs[n_s : n_s + n_f]
+        out_refs = refs[n_s + n_f :]
+        scalars = {n: ref[0] for n, ref in zip(scalar_names, scal_refs)}
+        windows = {n: ref[...] for n, ref in zip(field_names, in_refs)}
+        updates = update_fn(windows, scalars)
+        missing = set(out_names) - set(updates)
+        if missing:
+            raise ValueError(f"update_fn did not produce outputs {missing}")
+        mask = _interior_mask(block, shape, r)
+        for name, oref in zip(out_names, out_refs):
+            prev = windows[name][center]
+            oref[...] = jnp.where(mask, updates[name].astype(dtype), prev)
+
+    in_specs = [pl.BlockSpec(memory_space=pltpu.SMEM) for _ in scalar_names]
+    in_specs += [pl.BlockSpec(win, in_index_map) for _ in field_names]
+    out_specs = [pl.BlockSpec(block, out_index_map) for _ in out_names]
+    out_shape = [jax.ShapeDtypeStruct(shape, dtype) for _ in out_names]
+
+    call = pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs[0] if len(out_names) == 1 else out_specs,
+        out_shape=out_shape[0] if len(out_names) == 1 else out_shape,
+        interpret=interpret,
+    )
+
+    def run(fields: Mapping[str, jax.Array], scalars: Mapping[str, jax.Array]):
+        ordered_scal = [
+            jnp.asarray(scalars[n], dtype=dtype).reshape((1,)) for n in scalar_names
+        ]
+        ordered_fields = [jnp.asarray(fields[n], dtype=dtype) for n in field_names]
+        for n, f in zip(field_names, ordered_fields):
+            if f.shape != shape:
+                raise ValueError(f"field {n!r} has shape {f.shape}, expected {shape}")
+        outs = call(*ordered_scal, *ordered_fields)
+        if len(out_names) == 1:
+            outs = [outs]
+        return dict(zip(out_names, outs))
+
+    run.grid = grid
+    run.block = block
+    run.window_bytes = len(field_names) * math.prod(b + 2 * r for b in block) * dtype.itemsize
+    return run

@@ -1,0 +1,1 @@
+"""Launch layer: meshes, jit step builders, dry-run, train/serve drivers."""

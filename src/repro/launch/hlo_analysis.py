@@ -1,0 +1,406 @@
+"""HLO-text analyzer: per-computation FLOPs / bytes / collectives with
+while-loop trip-count multiplication.
+
+Why this exists: ``compiled.cost_analysis()`` visits every computation
+exactly once — a `lax.scan` over 80 layers reports one layer's FLOPs
+(verified empirically in EXPERIMENTS.md §Dry-run calibration). All our
+models are scan-stacked, and attention/loss/SSD use inner chunk scans, so
+a faithful roofline needs the call graph walked with trip counts:
+
+    cost(ENTRY) = Σ own ops + Σ while: trip × cost(body) + cost(cond)
+                           + fusion/call/conditional: cost(callee)
+
+Heuristics (documented, validated against cost_analysis on scan-free
+modules in tests/test_hlo_analysis.py):
+  * trip count: the max integer constant in the while's condition
+    computation (scan induction starts at 0, condition is `lt N`);
+  * FLOPs: 2 * result_elems * contraction_size for dot ops (+ convolution
+    treated alike via window size); elementwise FLOPs are ignored — they
+    are never compute-roofline-relevant on MXU hardware;
+  * bytes: operand + result sizes of top-level ops, skipping pure
+    plumbing (parameter/constant/tuple/get-tuple-element/bitcast/while/
+    call/conditional); fusion internals are NOT counted (a fusion reads
+    its operands and writes its result once — that is the point of fusion);
+  * collectives: ring model as in roofline.py, multiplied by trip counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_TRIP_CFG = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_INSTR_HEAD = re.compile(r"^\s+(ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_OP_AFTER_SHAPE = re.compile(r"\s*([\w\-]+)\(")
+
+
+def _split_instr(line: str):
+    """-> (name, shape_str, op, rest_after_open_paren) or None.
+
+    Robust to tuple result types containing `/*index=N*/` comments, which
+    defeat any character-class regex over the shape."""
+    m = _INSTR_HEAD.match(line)
+    if not m:
+        return None
+    rest = line[m.end():]
+    if rest.startswith("("):
+        depth = 0
+        end = -1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        shape, tail = rest[: end + 1], rest[end + 1:]
+    else:
+        j = rest.find(" ")
+        if j < 0:
+            return None
+        shape, tail = rest[:j], rest[j:]
+    m2 = _OP_AFTER_SHAPE.match(tail)
+    if not m2:
+        return None
+    return m.group(2), shape, m2.group(1), tail[m2.end():]
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_CALLS = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)="
+                    r"\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+
+PLUMBING = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+            "while", "call", "conditional", "after-all", "partition-id",
+            "replica-id"}
+
+COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "all-gather-start", "all-reduce-start",
+               "collective-permute-start", "all-gather-done",
+               "all-reduce-done", "collective-permute-done"}
+
+
+def shape_elems_bytes(shape_str: str) -> tuple[int, int]:
+    elems = 0
+    nbytes = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    shape_str: str
+    rest: str
+    operands: list
+
+    @property
+    def result_bytes(self) -> int:
+        return shape_elems_bytes(self.shape_str)[1]
+
+    @property
+    def result_elems(self) -> int:
+        return shape_elems_bytes(self.shape_str)[0]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instrs: list
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        h = _COMP_HDR.match(line)
+        if h:
+            cur = Computation(h.group(2), bool(h.group(1)), [])
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        parsed = _split_instr(line)
+        if parsed is None:
+            continue
+        name, shape_str, op, rest = parsed
+        # operands: %refs inside the first balanced paren group
+        depth, end = 1, 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        opnds = _OPERAND.findall(rest[:end])
+        cur.instrs.append(Instr(name, op, shape_str, rest, opnds))
+    return comps
+
+
+def _symbol_table(comp: Computation) -> dict[str, int]:
+    return {i.name: i.result_bytes for i in comp.instrs}
+
+
+def _dot_flops(instr: Instr, sym_elems: dict[str, tuple[int, int]]) -> float:
+    """2 * result_elems * contraction size (from lhs shape + contracting dims)."""
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rest)
+    if not m or not instr.operands:
+        return 2.0 * instr.result_elems  # degenerate
+    lhs = instr.operands[0]
+    lhs_dims = sym_elems.get(lhs)
+    if lhs_dims is None:
+        return 2.0 * instr.result_elems
+    contract = 1
+    for d in (int(x) for x in m.group(1).split(",") if x.strip()):
+        if d < len(lhs_dims):
+            contract *= lhs_dims[d]
+    # batch dims are shared between result and lhs — not re-multiplied
+    return 2.0 * instr.result_elems * contract
+
+
+def _dims_of(shape_str: str) -> tuple[int, ...]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return ()
+    return tuple(int(d) for d in m.group(2).split(",") if d.strip())
+
+
+def _trip_count(cond: Computation) -> int:
+    best = 1
+    for i in cond.instrs:
+        for c in _CONST_INT.finditer(i.rest if i.op == "constant" else ""):
+            best = max(best, int(c.group(1)))
+        if i.op == "constant":
+            m = re.search(r"constant\((\d+)\)", i.shape_str + " " + i.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    # constants appear as `%c = s32[] constant(24)`
+    return best
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_wire: float = 0.0
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+
+    def __add__(self, o: "Cost") -> "Cost":
+        cc = dict(self.coll_counts)
+        for k, v in o.coll_counts.items():
+            cc[k] = cc.get(k, 0) + v
+        return Cost(self.flops + o.flops, self.bytes + o.bytes,
+                    self.coll_wire + o.coll_wire, cc)
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k, self.coll_wire * k,
+                    {kk: v * k for kk, v in self.coll_counts.items()})
+
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\}?", re.S)
+
+
+def _group_size(rest: str) -> int:
+    m = _GROUPS_IOTA_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(rest)
+    if m:
+        first = m.group(1).split("}")[0].strip("{} ")
+        if first:
+            return len([x for x in first.split(",") if x.strip()])
+    if "source_target_pairs" in rest:
+        return 2
+    return 1
+
+
+def _coll_wire(instr: Instr) -> float:
+    op = instr.op.replace("-start", "")
+    size = instr.result_bytes
+    if op.endswith("-done"):
+        return 0.0
+    n = max(_group_size(instr.rest), 1)
+    if op == "all-reduce":
+        return 2.0 * size * (n - 1) / n
+    if op == "collective-permute":
+        return float(size)
+    return size * (n - 1) / n
+
+
+class ModuleCost:
+    def __init__(self, text: str):
+        self.comps = parse_module(text)
+        self._memo: dict[str, Cost] = {}
+        self.entry = next((c for c in self.comps.values() if c.is_entry), None)
+        if self.entry is None and self.comps:
+            self.entry = list(self.comps.values())[0]
+
+    def cost(self) -> Cost:
+        return self._comp_cost(self.entry.name)
+
+    def _callees(self, instr: Instr) -> list[str]:
+        out = []
+        for m in _CALLS.finditer(instr.rest):
+            for nm in m.group(1).split(","):
+                out.append(nm.strip().lstrip("%"))
+        return out
+
+    def _comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        if comp is None:
+            return Cost()
+        self._memo[name] = Cost()  # cycle guard
+        sym_dims = {i.name: _dims_of(i.shape_str) for i in comp.instrs}
+        sym_bytes = {i.name: i.result_bytes for i in comp.instrs}
+        total = Cost()
+        for i in comp.instrs:
+            op = i.op
+            if op == "while":
+                body, cond = None, None
+                mb = re.search(r"body=%?([\w.\-]+)", i.rest)
+                mc = re.search(r"condition=%?([\w.\-]+)", i.rest)
+                if mb:
+                    body = mb.group(1)
+                if mc:
+                    cond = mc.group(1)
+                mt = _TRIP_CFG.search(i.rest)
+                trip = int(mt.group(1)) if mt else self._while_trip(cond)
+                inner = self._comp_cost(body) if body else Cost()
+                total = total + inner.scaled(trip)
+                continue
+            if op in ("call", "conditional", "async-start"):
+                for cal in self._callees(i):
+                    total = total + self._comp_cost(cal)
+                continue
+            if op == "fusion":
+                # FLOPs from inside the fusion; bytes only at its boundary.
+                callees = self._callees(i)
+                inner = self._comp_cost(callees[0]) if callees else Cost()
+                total = total + Cost(flops=inner.flops,
+                                     coll_wire=inner.coll_wire,
+                                     coll_counts=inner.coll_counts)
+                total = total + Cost(bytes=self._fusion_bytes(i, callees, sym_bytes))
+                continue
+            if op in PLUMBING:
+                continue
+            if op in ("dot", "convolution"):
+                total = total + Cost(flops=_dot_flops(i, sym_dims))
+            if op in COLLECTIVES:
+                w = _coll_wire(i)
+                total = total + Cost(
+                    coll_wire=w,
+                    coll_counts={i.op.replace("-start", "").replace("-done", ""): 1}
+                    if w else {})
+            total = total + Cost(bytes=self._instr_bytes(i, sym_bytes))
+        self._memo[name] = total
+        return total
+
+    def _while_trip(self, cond_name: Optional[str]) -> int:
+        if not cond_name:
+            return 1
+        cond = self.comps.get(cond_name)
+        if cond is None:
+            return 1
+        best = 1
+        for i in cond.instrs:
+            if i.op == "constant":
+                # rest looks like "24), metadata=..." after the regex split
+                m = re.match(r"(\d+)\)", i.rest)
+                if m:
+                    best = max(best, int(m.group(1)))
+        return best
+
+    def _instr_bytes(self, i: Instr, sym_bytes: dict) -> float:
+        """Realistic HBM traffic of one top-level op."""
+        op = i.op
+        if op in ("dynamic-slice", "gather", "slice"):
+            return 2.0 * i.result_bytes  # reads only what it produces
+        if op in ("dynamic-update-slice", "scatter"):
+            upd = sym_bytes.get(i.operands[1], 0) if len(i.operands) > 1 else 0
+            return 2.0 * upd  # in-place: touched bytes only
+        if op in ("broadcast", "iota"):
+            return float(i.result_bytes)
+        opnd = sum(sym_bytes.get(o, 0) for o in i.operands)
+        return float(opnd + i.result_bytes)
+
+    def _fusion_bytes(self, i: Instr, callees: list, sym_bytes: dict) -> float:
+        """Fusion boundary traffic with two in-place/sparse refinements:
+
+        1. root (or tuple-element roots) dynamic-update-slice: the aliased
+           full-size target never crosses HBM — count the update only;
+        2. an operand whose *only* consumer inside the fusion is a
+           dynamic-slice/gather contributes the sliced bytes, not its full
+           size (decode-time cache reads, scan per-layer weight slices).
+        """
+        total = float(sum(sym_bytes.get(o, 0) for o in i.operands) + i.result_bytes)
+        if not callees:
+            return total
+        comp = self.comps.get(callees[0])
+        if comp is None or not comp.instrs:
+            return total
+        inner = {x.name: x for x in comp.instrs}
+        inner_bytes = {x.name: x.result_bytes for x in comp.instrs}
+        # --- (2) sliced params ---
+        params = {}
+        for x in comp.instrs:
+            if x.op == "parameter":
+                m = re.match(r"(\d+)\)", x.rest)
+                if m:
+                    params[x.name] = int(m.group(1))
+        consumers: dict[str, list] = {}
+        for x in comp.instrs:
+            for o in x.operands:
+                consumers.setdefault(o, []).append(x)
+        adj = total
+        for pname, pidx in params.items():
+            cons = consumers.get(pname, [])
+            if len(cons) == 1 and cons[0].op in ("dynamic-slice", "gather") \
+                    and pidx < len(i.operands):
+                full = sym_bytes.get(i.operands[pidx], 0)
+                adj -= full
+                adj += cons[0].result_bytes
+        # --- (1) in-place DUS root ---
+        root = comp.instrs[-1]
+        dus_list = []
+        if root.op == "dynamic-update-slice":
+            dus_list = [root]
+        elif root.op == "tuple":
+            dus_list = [inner[o] for o in root.operands
+                        if o in inner and inner[o].op == "dynamic-update-slice"]
+        for d in dus_list:
+            upd = inner_bytes.get(d.operands[1], 0) if len(d.operands) > 1 else 0
+            adj -= 2.0 * d.result_bytes
+            adj += 2.0 * upd
+        return max(adj, 0.0)
+
+
+def analyze_text(text: str) -> Cost:
+    return ModuleCost(text).cost()

@@ -1,0 +1,228 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = sum over collectives of ring-model bytes / link_bw
+
+Sources: ``compiled.cost_analysis()`` for FLOPs/bytes (per-device numbers —
+the costed module is the SPMD-partitioned per-device program);
+``compiled.as_text()`` parsed for collective ops (GSPMD inserts them after
+partitioning, so lowered-as_text would miss most of them).
+
+Ring cost model per op (n = participants, S = *result* shard bytes on one
+device):  all-gather moves S*(n-1)/n of the result per link step and the
+result is n shards -> bytes_on_wire_per_device = S*(n-1)/n; all-reduce =
+2*S*(n-1)/n (reduce-scatter + all-gather); reduce-scatter = S*(n-1)/n
+(S = input shard); all-to-all = S*(n-1)/n; collective-permute = S.
+
+Hardware constants are the task-specified TPU v5e numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+import numpy as np
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+LINK_BW = 50e9            # bytes/s per ICI link (per direction)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s/]+?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute|"
+    r"all-gather-start|all-reduce-start|collective-permute-start)\(",
+    re.M)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}", re.S)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{(.*?)\}", re.S)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota format [num_groups, group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].strip("{} ")
+        if first:
+            return len([x for x in first.split(",") if x.strip()])
+    m = _PAIRS_RE.search(line)
+    if m:
+        return 2
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    result_bytes: dict       # raw per-device result bytes by op kind
+    wire_bytes: float        # ring-model bytes on the busiest device's links
+    by_op: list
+
+    def to_json(self):
+        return {"counts": self.counts, "result_bytes": self.result_bytes,
+                "wire_bytes": self.wire_bytes}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: dict = {}
+    rbytes: dict = {}
+    wire = 0.0
+    by_op = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        op = op.replace("-start", "")
+        size = _shape_bytes(shape_str)
+        n = max(_group_size(line), 1)
+        if op == "all-reduce":
+            w = 2.0 * size * (n - 1) / n
+        elif op == "collective-permute":
+            w = float(size)
+        else:  # all-gather / reduce-scatter / all-to-all
+            w = size * (n - 1) / n
+        counts[op] = counts.get(op, 0) + 1
+        rbytes[op] = rbytes.get(op, 0) + size
+        wire += w
+        by_op.append({"op": op, "bytes": size, "group": n, "wire": w})
+    return CollectiveStats(counts, rbytes, wire, by_op)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float             # per-device
+    hbm_bytes: float         # per-device
+    wire_bytes: float        # per-device (ring model)
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    model_flops: float = 0.0
+    useful_ratio: float = 0.0
+
+    def to_json(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(cost: dict, coll: CollectiveStats, n_devices: int,
+            model_flops_global: float = 0.0, scan_collective_reps: float = 1.0,
+            link_bw: float = LINK_BW) -> Roofline:
+    """cost: compiled.cost_analysis() dict (per-device program).
+
+    scan_collective_reps: collectives inside a lax.scan body appear once in
+    HLO but execute once per layer — multiply wire bytes accordingly (we
+    pass n_layers when the collective sits in the scanned block).
+    """
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    wire = coll.wire_bytes * scan_collective_reps
+    t_c = flops / PEAK_FLOPS
+    t_m = hbm / HBM_BW
+    t_l = wire / link_bw
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_l)),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops_global / max(n_devices, 1)
+    return Roofline(flops, hbm, wire, t_c, t_m, t_l, dom,
+                    model_flops=mf,
+                    useful_ratio=(mf / flops if flops else 0.0))
+
+
+def analyze_walk(mc, n_devices: int, model_flops_global: float = 0.0,
+                 link_bw: float = LINK_BW) -> Roofline:
+    """Roofline terms from a trip-count-aware hlo_analysis.Cost walk."""
+    t_c = mc.flops / PEAK_FLOPS
+    t_m = mc.bytes / HBM_BW
+    t_l = mc.coll_wire / link_bw
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_l)),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops_global / max(n_devices, 1)
+    return Roofline(mc.flops, mc.bytes, mc.coll_wire, t_c, t_m, t_l, dom,
+                    model_flops=mf,
+                    useful_ratio=(mf / mc.flops if mc.flops else 0.0))
+
+
+def analytic_bytes(cfg, mode: str, seq_len: int, global_batch: int,
+                   n_dev: int, tensor_shard: int = 16,
+                   batch_shard: int = 16, n_micro: int = 1) -> float:
+    """Paper-style A_eff accounting of per-device HBM traffic per step.
+
+    This is the T_eff methodology of the paper (count the bytes that MUST
+    cross HBM under perfect on-chip reuse) applied to the LM step; the
+    HLO-parsed byte count is reported alongside as a conservative upper
+    bound (CPU HLO fuses far less than TPU, DESIGN.md §6).
+    """
+    P = cfg.param_count()
+    Pa = cfg.active_param_count()
+    D = cfg.d_model
+    Ln = max(cfg.n_layers, 1)
+    dt_p = 2  # bf16 params
+    if mode == "train":
+        # params bf16 r+w (2+2) + fp32 m,v,master r+w (24) per element
+        opt_traffic = 28.0 * P / n_dev * n_micro ** 0  # once per step
+        # per microbatch: read active params twice (fwd+bwd) beyond cache
+        w_traffic = 2.0 * dt_p * Pa / n_dev * n_micro
+        tok_loc = seq_len * global_batch / (n_dev / tensor_shard) / tensor_shard
+        act = 12.0 * Ln * tok_loc * D * dt_p          # fwd+bwd+remat streams
+        logits = 4.0 * tok_loc * cfg.vocab / tensor_shard * 4.0
+        return opt_traffic + w_traffic + act + logits
+    if mode == "prefill":
+        tok_loc = seq_len * global_batch / (n_dev / tensor_shard) / tensor_shard
+        act = 4.0 * Ln * tok_loc * D * dt_p
+        cache = 2.0 * global_batch * seq_len * cfg.n_kv_heads * cfg.head_dim \
+            * dt_p * Ln / n_dev
+        return dt_p * Pa / n_dev + act + cache
+    # decode: all resident weights stream once + cache read + state write
+    w = dt_p * Pa / n_dev
+    if cfg.family in ("ssm", "hybrid"):
+        sc_state = global_batch * (cfg.ssm_expand * D // max(cfg.ssm_head_dim, 1)) \
+            * cfg.ssm_head_dim * cfg.ssm_state * 4.0 * Ln / n_dev
+        cache = 2.0 * sc_state
+    else:
+        cache = 2.0 * global_batch * seq_len * cfg.n_kv_heads * cfg.head_dim \
+            * dt_p * Ln / n_dev
+        if cfg.window is not None:
+            cache *= min(cfg.window / seq_len, 1.0)
+    return w + cache
+
+
+def model_flops_train(cfg, seq_len: int, global_batch: int) -> float:
+    """6 * N_active * D tokens (the standard training-FLOPs estimate)."""
+    return 6.0 * cfg.active_param_count() * seq_len * global_batch
+
+
+def model_flops_decode(cfg, global_batch: int) -> float:
+    """2 * N_active per generated token (forward only)."""
+    return 2.0 * cfg.active_param_count() * global_batch
+
+
+def model_flops_prefill(cfg, seq_len: int, global_batch: int) -> float:
+    return 2.0 * cfg.active_param_count() * seq_len * global_batch

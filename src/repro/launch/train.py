@@ -1,0 +1,158 @@
+"""Training driver: real loop with checkpoint/restore, fault monitoring,
+deterministic data, and optional cross-pod gradient compression.
+
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m \
+        --steps 200 --seq-len 256 --global-batch 8 --smoke \
+        --ckpt-dir /tmp/run1 [--resume]
+
+On the production mesh this is the same code path the dry-run compiles;
+on a CPU host it runs the smoke-scale configs end-to-end (examples/
+train_lm.py drives it programmatically).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import configs
+from ..checkpoint import CheckpointManager
+from ..data import DataConfig, make_source
+from ..distributed import fault, sharding as shd
+from ..models import build, RunConfig
+from ..optim import adamw
+from . import mesh as mesh_mod
+from . import steps as steps_mod
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    steps: int = 100
+    seq_len: int = 256
+    global_batch: int = 8
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    resume: bool = False
+    seed: int = 0
+    data_seed: int = 1234
+    heartbeat_dir: Optional[str] = None
+
+
+def train(arch: str, loop: TrainLoopConfig, rc: Optional[RunConfig] = None,
+          smoke: bool = False, mesh=None, rules: shd.ShardRules = shd.DEFAULT_RULES,
+          log_fn=print):
+    cfg = configs.get_smoke(arch) if smoke else configs.get_arch(arch)
+    rc = rc or RunConfig(param_dtype="float32", remat=False,
+                         total_steps=loop.steps,
+                         loss_chunk=min(256, loop.seq_len))
+    model = build(cfg, rc)
+    if mesh is None:
+        mesh = mesh_mod.make_host_mesh()
+    rules = rules.for_mesh(mesh)
+
+    opt_cfg = adamw.AdamWConfig(
+        lr=rc.lr, beta1=rc.beta1, beta2=rc.beta2, weight_decay=rc.weight_decay,
+        grad_clip=rc.grad_clip, schedule=rc.schedule,
+        warmup_steps=min(rc.warmup_steps, max(loop.steps // 10, 1)),
+        total_steps=loop.steps)
+    bundle = steps_mod.make_train_step(model, mesh, rules, opt_cfg,
+                                       loop.seq_len, loop.global_batch)
+    step_fn = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                      out_shardings=bundle.out_shardings,
+                      donate_argnums=bundle.donate_argnums)
+
+    # --- state init / restore -------------------------------------------
+    p_shard = bundle.in_shardings[0]
+    params, _ = model.init(jax.random.PRNGKey(loop.seed))
+    params = jax.tree.map(lambda x, s: jax.device_put(x, s), params, p_shard)
+    opt_state = adamw.init(params, opt_cfg)
+    opt_state = jax.tree.map(lambda x, s: jax.device_put(x, s),
+                             opt_state, bundle.in_shardings[1])
+    start_step = 0
+    mgr = CheckpointManager(loop.ckpt_dir) if loop.ckpt_dir else None
+    if mgr and loop.resume and mgr.latest_step() is not None:
+        (params, opt_state), extra = mgr.restore(
+            (params, opt_state),
+            shardings=(bundle.in_shardings[0], bundle.in_shardings[1]))
+        start_step = int(extra["step"])
+        log_fn(f"resumed from step {start_step}")
+
+    # --- data --------------------------------------------------------------
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=loop.seq_len,
+                      global_batch=loop.global_batch, seed=loop.data_seed)
+    source = make_source(dcfg)
+    b_shard = bundle.in_shardings[2]
+
+    monitor = fault.StepMonitor(host_id=jax.process_index(),
+                                heartbeat_dir=loop.heartbeat_dir)
+    history = []
+    for step in range(start_step, loop.steps):
+        host = source.batch(step)
+        batch = {"tokens": jnp.asarray(host["tokens"]),
+                 "labels": jnp.asarray(host["labels"])}
+        if model.cfg.family == "vlm":
+            n = model.cfg.n_patches
+            key = jax.random.PRNGKey(step)
+            batch["patch_embeds"] = (jax.random.normal(
+                key, (loop.global_batch, n, cfg.d_model)) * 0.02).astype(rc.param_dtype)
+            batch["tokens"] = batch["tokens"][:, :loop.seq_len - n]
+            batch["labels"] = batch["labels"][:, :loop.seq_len - n]
+        if model.cfg.family == "encdec":
+            key = jax.random.PRNGKey(step)
+            batch["frames"] = (jax.random.normal(
+                key, (loop.global_batch, cfg.source_len, cfg.d_model)) * 0.02
+            ).astype(rc.param_dtype)
+        batch = jax.tree.map(lambda x, s: jax.device_put(x, s), batch, b_shard)
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        metrics = jax.device_get(metrics)
+        dt = time.perf_counter() - t0
+        monitor.record(step, dt)
+        history.append(float(metrics["loss"]))
+        if step % loop.log_every == 0 or step == loop.steps - 1:
+            health = monitor.check_peers()
+            log_fn(f"step {step:5d} loss {metrics['loss']:.4f} "
+                   f"lr {metrics['lr']:.2e} |g| {metrics['grad_norm']:.3f} "
+                   f"{dt*1e3:.0f} ms"
+                   + (f" [stragglers: {health['stragglers']}]"
+                      if health["stragglers"] else ""))
+        if mgr and ((step + 1) % loop.ckpt_every == 0 or step == loop.steps - 1):
+            mgr.save(step + 1, (params, opt_state), blocking=False,
+                     extra={"loss": float(metrics["loss"])})
+    if mgr:
+        mgr.wait()
+    return params, opt_state, history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(configs.ARCH_IDS))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--heartbeat-dir", default=None)
+    args = ap.parse_args()
+    loop = TrainLoopConfig(steps=args.steps, seq_len=args.seq_len,
+                           global_batch=args.global_batch,
+                           ckpt_dir=args.ckpt_dir, resume=args.resume,
+                           ckpt_every=args.ckpt_every,
+                           heartbeat_dir=args.heartbeat_dir)
+    _, _, hist = train(args.arch, loop, smoke=args.smoke)
+    print(f"final loss {hist[-1]:.4f} (first {hist[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

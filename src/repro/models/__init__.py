@@ -1,0 +1,6 @@
+"""Functional model zoo for the assigned architecture pool."""
+from .config import ArchConfig, RunConfig, smoke_variant
+from .model import Model, build, synth_batch
+
+__all__ = ["ArchConfig", "RunConfig", "smoke_variant", "Model", "build",
+           "synth_batch"]

@@ -1,0 +1,96 @@
+"""Shared plumbing for the functional model zoo.
+
+Parameters are plain nested dicts of jax.Arrays. Init functions build trees
+whose leaves are ``Leaf(array, logical)`` — the logical sharding names ride
+along with the value — and ``split`` separates them into (params, specs)
+once at model-build time. No framework dependency; everything composes with
+pjit/scan/shard_map directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class Leaf:
+    value: jax.Array
+    logical: tuple  # logical sharding names per dim (see distributed.sharding)
+
+
+def leaf(value, logical):
+    assert len(logical) == value.ndim, (value.shape, logical)
+    return Leaf(value, tuple(logical))
+
+
+def split(tree):
+    """-> (params_tree, logical_tree) with identical structure."""
+    leaves_is = lambda x: isinstance(x, Leaf)
+    params = jax.tree.map(lambda l: l.value, tree, is_leaf=leaves_is)
+    logical = jax.tree.map(lambda l: l.logical, tree, is_leaf=leaves_is)
+    return params, logical
+
+
+def normal(key, shape, scale, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype) * scale
+
+
+def zeros(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+# --- numerics ----------------------------------------------------------------
+def rms_norm(x, scale, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., L, D) with D even; positions: (..., L) int."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., L, d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def swiglu(gate, up):
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+def stack_layers(key, n: int, init_one):
+    """Initialize n layers and stack every leaf along axis 0 (scan layout)."""
+    keys = jax.random.split(key, n)
+    trees = [init_one(k) for k in keys]
+    is_leaf = lambda x: isinstance(x, Leaf)
+
+    def merge(*ls):
+        v = jnp.stack([l.value for l in ls])
+        return Leaf(v, ("layers",) + ls[0].logical)
+
+    return jax.tree.map(merge, *trees, is_leaf=is_leaf)

@@ -1,0 +1,223 @@
+"""Encoder–decoder transformer (Seamless-M4T backbone).
+
+Per the task spec the modality frontend is a stub: the encoder consumes
+precomputed frame embeddings (B, S_src, D) from input_specs(). Encoder =
+bidirectional self-attention blocks; decoder = causal self-attention +
+cross-attention + MLP. Cross K/V are computed once at prefill and cached.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+from . import layers as ly
+from . import losses as lo
+from .config import ArchConfig, RunConfig
+from .transformer import attn_cfg, head_weight, Identity
+
+
+def _enc_attn_cfg(cfg):
+    import dataclasses
+    return dataclasses.replace(attn_cfg(cfg), causal=False, window=None)
+
+
+def _cross_init(key, cfg: ArchConfig, dtype):
+    # cross-attention: q from decoder, k/v from encoder memory
+    return ly.attn_init(key, attn_cfg(cfg), dtype)
+
+
+def enc_block_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "attn_norm": ly.norm_init(cfg.d_model, dtype),
+        "attn": ly.attn_init(ks[0], _enc_attn_cfg(cfg), dtype),
+        "mlp_norm": ly.norm_init(cfg.d_model, dtype),
+        "mlp": ly.mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def dec_block_init(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "self_norm": ly.norm_init(cfg.d_model, dtype),
+        "self_attn": ly.attn_init(ks[0], attn_cfg(cfg), dtype),
+        "cross_norm": ly.norm_init(cfg.d_model, dtype),
+        "cross_attn": _cross_init(ks[1], cfg, dtype),
+        "mlp_norm": ly.norm_init(cfg.d_model, dtype),
+        "mlp": ly.mlp_init(ks[2], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def model_init(key, cfg: ArchConfig, rc: RunConfig):
+    dtype = jnp.dtype(rc.param_dtype)
+    ks = jax.random.split(key, 5)
+    tree = {
+        "embed": cm.leaf(cm.normal(ks[0], (cfg.vocab, cfg.d_model), 0.02, dtype),
+                         ("tensor", "fsdp")),
+        "enc_blocks": cm.stack_layers(ks[1], cfg.n_enc_layers,
+                                      lambda k: enc_block_init(k, cfg, dtype)),
+        "dec_blocks": cm.stack_layers(ks[2], cfg.n_dec_layers,
+                                      lambda k: dec_block_init(k, cfg, dtype)),
+        "enc_norm_f": ly.norm_init(cfg.d_model, dtype),
+        "norm_f": ly.norm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = cm.leaf(
+            cm.normal(ks[3], (cfg.d_model, cfg.vocab), cfg.d_model ** -0.5, dtype),
+            ("fsdp", "tensor"))
+    return tree
+
+
+def _cross_attend(p, x, memory_kv, cfg):
+    """x (B, Lq, D) attends to precomputed encoder K/V (B, Hkv, S, Dh)."""
+    B, Lq, D = x.shape
+    acfg = attn_cfg(cfg)
+    H, Dh = acfg.n_heads, acfg.head_dim
+    q = (x @ p["wq"]).reshape(B, Lq, H, Dh).swapaxes(1, 2)
+    mk, mv = memory_kv
+    from ..kernels import ops
+    if Lq == 1:
+        out = ops.decode_attention(q[:, :, 0], mk, mv)[:, None]  # (B,1,H*Dh)? -> reshape
+        out = out.reshape(B, 1, H * Dh)
+    else:
+        out = ops.attention(q, mk, mv, causal=False, impl="chunked")
+        out = out.swapaxes(1, 2).reshape(B, Lq, H * Dh)
+    return out @ p["wo"]
+
+
+def encode(params, cfg: ArchConfig, rc: RunConfig, frames,
+           constrain: Callable = Identity):
+    """frames: (B, S_src, D) stub frontend embeddings -> encoder memory."""
+    B, S, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(h, bp):
+        a_in = ly.norm_apply(bp["attn_norm"], h, cfg.norm_eps)
+        a_in = constrain(a_in, ("batch", None, None))  # SP boundary
+        a, _ = ly.attn_apply(bp["attn"], a_in, _enc_attn_cfg(cfg), positions,
+                             attn_impl=rc.attn_impl)
+        h = constrain(h + a, ("batch", "seq_act", None))
+        hn = ly.norm_apply(bp["mlp_norm"], h, cfg.norm_eps)
+        hn = constrain(hn, ("batch", None, None))
+        h = constrain(h + ly.mlp_apply(bp["mlp"], hn),
+                      ("batch", "seq_act", None))
+        return h, None
+
+    if rc.remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, frames.astype(jnp.dtype(rc.param_dtype)),
+                        params["enc_blocks"])
+    return ly.norm_apply(params["enc_norm_f"], h, cfg.norm_eps)
+
+
+def _memory_kv(bp, memory, cfg):
+    """Precompute cross-attention K/V from encoder memory for one layer."""
+    B, S, _ = memory.shape
+    acfg = attn_cfg(cfg)
+    Hkv, Dh = acfg.n_kv_heads, acfg.head_dim
+    k = (memory @ bp["wk"]).reshape(B, S, Hkv, Dh).swapaxes(1, 2)
+    v = (memory @ bp["wv"]).reshape(B, S, Hkv, Dh).swapaxes(1, 2)
+    return k, v
+
+
+def decode_train(params, cfg: ArchConfig, rc: RunConfig, memory, tokens,
+                 constrain: Callable = Identity):
+    emb = jnp.take(params["embed"], tokens, axis=0)
+    B, L, _ = emb.shape
+    positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+
+    def body(h, bp):
+        a_in = ly.norm_apply(bp["self_norm"], h, cfg.norm_eps)
+        a_in = constrain(a_in, ("batch", None, None))  # SP boundary
+        a, _ = ly.attn_apply(bp["self_attn"], a_in, attn_cfg(cfg), positions,
+                             attn_impl=rc.attn_impl)
+        h = constrain(h + a, ("batch", "seq_act", None))
+        c_in = ly.norm_apply(bp["cross_norm"], h, cfg.norm_eps)
+        c_in = constrain(c_in, ("batch", None, None))
+        mkv = _memory_kv(bp["cross_attn"], memory, cfg)
+        h = constrain(h + _cross_attend(bp["cross_attn"], c_in, mkv, cfg),
+                      ("batch", "seq_act", None))
+        hn = ly.norm_apply(bp["mlp_norm"], h, cfg.norm_eps)
+        hn = constrain(hn, ("batch", None, None))
+        h = constrain(h + ly.mlp_apply(bp["mlp"], hn),
+                      ("batch", "seq_act", None))
+        return h, None
+
+    if rc.remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, emb, params["dec_blocks"])
+    return ly.norm_apply(params["norm_f"], h, cfg.norm_eps)
+
+
+def loss_fn(params, cfg: ArchConfig, rc: RunConfig, tokens, labels,
+            frames=None, constrain: Callable = Identity):
+    memory = encode(params, cfg, rc, frames, constrain)
+    h = decode_train(params, cfg, rc, memory, tokens, constrain)
+    return lo.chunked_softmax_xent(h, head_weight(params, cfg), labels,
+                                   chunk=rc.loss_chunk, z_loss=rc.z_loss)
+
+
+def init_cache(cfg: ArchConfig, rc: RunConfig, batch: int, max_seq: int,
+               dtype=None):
+    dtype = jnp.dtype(rc.param_dtype) if dtype is None else dtype
+    Ln = cfg.n_dec_layers
+    Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
+    S = cfg.source_len
+    return {
+        "k": jnp.zeros((Ln, batch, Hkv, max_seq, Dh), dtype),
+        "v": jnp.zeros((Ln, batch, Hkv, max_seq, Dh), dtype),
+        "mk": jnp.zeros((Ln, batch, Hkv, S, Dh), dtype),
+        "mv": jnp.zeros((Ln, batch, Hkv, S, Dh), dtype),
+    }
+
+
+def prefill(params, cfg: ArchConfig, rc: RunConfig, tokens, max_seq: int,
+            frames=None, constrain: Callable = Identity):
+    """Encode source + teacher-forced decoder pass; returns (logits, cache)."""
+    memory = encode(params, cfg, rc, frames, constrain)
+    emb = jnp.take(params["embed"], tokens, axis=0)
+    B, L, _ = emb.shape
+    positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+
+    def body(h, bp):
+        a_in = ly.norm_apply(bp["self_norm"], h, cfg.norm_eps)
+        a, (k, v) = ly.attn_apply(bp["self_attn"], a_in, attn_cfg(cfg), positions,
+                                  attn_impl=rc.attn_impl)
+        h = h + a
+        c_in = ly.norm_apply(bp["cross_norm"], h, cfg.norm_eps)
+        mk, mv = _memory_kv(bp["cross_attn"], memory, cfg)
+        h = h + _cross_attend(bp["cross_attn"], c_in, (mk, mv), cfg)
+        h = h + ly.mlp_apply(bp["mlp"], ly.norm_apply(bp["mlp_norm"], h, cfg.norm_eps))
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, max_seq - L), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, max_seq - L), (0, 0)))
+        return h, (kp, vp, mk, mv)
+
+    h, (ks, vs, mks, mvs) = jax.lax.scan(body, emb, params["dec_blocks"])
+    h = ly.norm_apply(params["norm_f"], h, cfg.norm_eps)
+    logits = lo.logits_last(h[:, -1], head_weight(params, cfg))
+    return logits, {"k": ks, "v": vs, "mk": mks, "mv": mvs}
+
+
+def decode_step(params, cfg: ArchConfig, rc: RunConfig, token, cache, pos,
+                constrain: Callable = Identity):
+    emb = jnp.take(params["embed"], token[:, None], axis=0)
+
+    def body(h, xs):
+        bp, kc, vc, mk, mv = xs
+        a_in = ly.norm_apply(bp["self_norm"], h, cfg.norm_eps)
+        a, (kc, vc) = ly.attn_decode(bp["self_attn"], a_in, attn_cfg(cfg), kc, vc, pos)
+        h = h + a
+        c_in = ly.norm_apply(bp["cross_norm"], h, cfg.norm_eps)
+        h = h + _cross_attend(bp["cross_attn"], c_in, (mk, mv), cfg)
+        h = h + ly.mlp_apply(bp["mlp"], ly.norm_apply(bp["mlp_norm"], h, cfg.norm_eps))
+        return h, (kc, vc)
+
+    h, (ks, vs) = jax.lax.scan(
+        body, emb, (params["dec_blocks"], cache["k"], cache["v"],
+                    cache["mk"], cache["mv"]))
+    h = ly.norm_apply(params["norm_f"], h, cfg.norm_eps)
+    logits = lo.logits_last(h[:, -1], head_weight(params, cfg))
+    return logits, {"k": ks, "v": vs, "mk": cache["mk"], "mv": cache["mv"]}

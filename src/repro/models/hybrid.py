@@ -1,0 +1,237 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared attention block.
+
+The shared transformer block (attention + MLP with its own norms) is
+applied after every ``attn_every`` Mamba2 layers, re-using the *same*
+parameters at each application (Zamba2's parameter-sharing trick;
+per-invocation LoRA deltas are omitted — noted in DESIGN.md).
+
+Scan layout: the mamba stack is grouped as (n_groups, attn_every, ...) so
+the forward is scan(groups){ scan(inner mamba) ; shared attn } — HLO stays
+depth-independent and the shared block appears once per group, which keeps
+cost_analysis faithful (an unrolled python loop would inflate HLO size; a
+per-layer lax.cond would miscount FLOPs).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+from . import layers as ly
+from . import losses as lo
+from . import ssm as ssm_mod
+from .config import ArchConfig, RunConfig
+from .transformer import attn_cfg, ssm_cfg, head_weight, Identity
+
+
+def _group_layout(cfg: ArchConfig) -> tuple[int, int, int]:
+    k = max(cfg.attn_every, 1)
+    n_groups, rem = divmod(cfg.n_layers, k)
+    return n_groups, k, rem
+
+
+def model_init(key, cfg: ArchConfig, rc: RunConfig):
+    dtype = jnp.dtype(rc.param_dtype)
+    ks = jax.random.split(key, 6)
+    n_groups, k, rem = _group_layout(cfg)
+
+    def mamba_layer(kk):
+        return {"norm": ly.norm_init(cfg.d_model, dtype),
+                "ssm": ssm_mod.ssm_init(kk, ssm_cfg(cfg), dtype)}
+
+    tree = {
+        "embed": cm.leaf(cm.normal(ks[0], (cfg.vocab, cfg.d_model), 0.02, dtype),
+                         ("tensor", "fsdp")),
+        # (n_groups, attn_every, ...) stacked mamba params
+        "mamba": cm.stack_layers(
+            ks[1], n_groups, lambda kk: cm.stack_layers(kk, k, mamba_layer)),
+        "shared": {
+            "attn_norm": ly.norm_init(cfg.d_model, dtype),
+            "attn": ly.attn_init(ks[2], attn_cfg(cfg), dtype),
+            "mlp_norm": ly.norm_init(cfg.d_model, dtype),
+            "mlp": ly.mlp_init(ks[3], cfg.d_model, cfg.d_ff, dtype),
+        },
+        "norm_f": ly.norm_init(cfg.d_model, dtype),
+    }
+    if rem:
+        tree["mamba_tail"] = cm.stack_layers(ks[4], rem, mamba_layer)
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = cm.leaf(
+            cm.normal(ks[5], (cfg.d_model, cfg.vocab), cfg.d_model ** -0.5, dtype),
+            ("fsdp", "tensor"))
+    return tree
+
+
+def _mamba_scan(stacked, h, cfg, rc, remat):
+    def body(hc, bp):
+        hn = ly.norm_apply(bp["norm"], hc, cfg.norm_eps)
+        out, _ = ssm_mod.ssm_apply(bp["ssm"], hn, ssm_cfg(cfg),
+                                   ssd_impl=rc.ssd_impl, conv_impl=rc.conv_impl)
+        return hc + out, None
+    if remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, stacked)
+    return h
+
+
+def _shared_attn(sp, h, cfg, rc, positions, constrain=Identity):
+    # sequence-parallel boundary (see transformer.block_apply)
+    a_in = ly.norm_apply(sp["attn_norm"], h, cfg.norm_eps)
+    a_in = constrain(a_in, ("batch", None, None))
+    a, _ = ly.attn_apply(sp["attn"], a_in, attn_cfg(cfg), positions,
+                         attn_impl=rc.attn_impl)
+    h = constrain(h + a, ("batch", "seq_act", None))
+    hn = ly.norm_apply(sp["mlp_norm"], h, cfg.norm_eps)
+    hn = constrain(hn, ("batch", None, None))
+    m = ly.mlp_apply(sp["mlp"], hn)
+    return constrain(h + m, ("batch", "seq_act", None))
+
+
+def forward_hidden(params, cfg: ArchConfig, rc: RunConfig, embeds,
+                   positions=None, constrain: Callable = Identity):
+    B, L, _ = embeds.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+
+    def group_body(h, gp):
+        h = _mamba_scan(gp, h, cfg, rc, rc.remat)
+        h = _shared_attn(params["shared"], h, cfg, rc, positions, constrain)
+        return constrain(h, ("batch", "seq_act", None)), None
+
+    h, _ = jax.lax.scan(group_body, embeds, params["mamba"])
+    if "mamba_tail" in params:
+        h = _mamba_scan(params["mamba_tail"], h, cfg, rc, rc.remat)
+    h = ly.norm_apply(params["norm_f"], h, cfg.norm_eps)
+    return h, jnp.float32(0.0)
+
+
+def loss_fn(params, cfg: ArchConfig, rc: RunConfig, tokens, labels,
+            prefix_embeds=None, constrain: Callable = Identity):
+    emb = jnp.take(params["embed"], tokens, axis=0)
+    emb = constrain(emb, ("batch", "seq_act", None))
+    h, _ = forward_hidden(params, cfg, rc, emb, constrain=constrain)
+    return lo.chunked_softmax_xent(h, head_weight(params, cfg), labels,
+                                   chunk=rc.loss_chunk, z_loss=rc.z_loss)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ArchConfig, rc: RunConfig, batch: int, max_seq: int,
+               dtype=None):
+    dtype = jnp.dtype(rc.param_dtype) if dtype is None else dtype
+    n_groups, k, rem = _group_layout(cfg)
+    sc = ssm_cfg(cfg)
+    Ln = cfg.n_layers
+    return {
+        "conv": jnp.zeros((Ln, batch, sc.d_conv - 1, sc.d_conv_in), dtype),
+        "ssm": jnp.zeros((Ln, batch, sc.n_heads, sc.head_dim, sc.d_state),
+                         jnp.float32),
+        # shared attention block: one KV cache per *application* (n_groups)
+        "k": jnp.zeros((n_groups, batch, cfg.n_kv_heads, max_seq, cfg.head_dim), dtype),
+        "v": jnp.zeros((n_groups, batch, cfg.n_kv_heads, max_seq, cfg.head_dim), dtype),
+    }
+
+
+def _tree_slice(tree, i, size):
+    return jax.tree.map(lambda x: jax.lax.dynamic_slice_in_dim(x, i, size, 0), tree)
+
+
+def _tree_update(tree, update, i):
+    return jax.tree.map(
+        lambda x, u: jax.lax.dynamic_update_slice_in_dim(x, u, i, 0), tree, update)
+
+
+def prefill(params, cfg: ArchConfig, rc: RunConfig, tokens, max_seq: int,
+            prefix_embeds=None, constrain: Callable = Identity):
+    emb = jnp.take(params["embed"], tokens, axis=0)
+    B, L, _ = emb.shape
+    positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+    n_groups, k, rem = _group_layout(cfg)
+    sc = ssm_cfg(cfg)
+
+    convs, ssms, kcs, vcs = [], [], [], []
+    h = emb
+
+    def mamba_with_state(bp, hc):
+        hn = ly.norm_apply(bp["norm"], hc, cfg.norm_eps)
+        out, st = ssm_mod.ssm_apply(bp["ssm"], hn, ssm_cfg(cfg), ssd_impl=rc.ssd_impl,
+                                    conv_impl=rc.conv_impl, return_state=True)
+        return hc + out, st
+
+    def run_stack(stacked, h, n):
+        def body(hc, bp):
+            return mamba_with_state(bp, hc)
+        return jax.lax.scan(body, h, stacked)
+
+    for g in range(n_groups):
+        gp = jax.tree.map(lambda x: x[g], params["mamba"])
+        h, st = run_stack(gp, h, k)
+        convs.append(st["conv"])
+        ssms.append(st["ssm"])
+        a_in = ly.norm_apply(params["shared"]["attn_norm"], h, cfg.norm_eps)
+        a, (kk, vv) = ly.attn_apply(params["shared"]["attn"], a_in, attn_cfg(cfg),
+                                    positions, attn_impl=rc.attn_impl)
+        h = h + a
+        h = h + ly.mlp_apply(params["shared"]["mlp"],
+                             ly.norm_apply(params["shared"]["mlp_norm"], h, cfg.norm_eps))
+        kcs.append(jnp.pad(kk, ((0, 0), (0, 0), (0, max_seq - L), (0, 0))))
+        vcs.append(jnp.pad(vv, ((0, 0), (0, 0), (0, max_seq - L), (0, 0))))
+    if rem:
+        h, st = run_stack(params["mamba_tail"], h, rem)
+        convs.append(st["conv"])
+        ssms.append(st["ssm"])
+    h = ly.norm_apply(params["norm_f"], h, cfg.norm_eps)
+    logits = lo.logits_last(h[:, -1], head_weight(params, cfg))
+    cache = {
+        "conv": jnp.concatenate(convs, axis=0),
+        "ssm": jnp.concatenate(ssms, axis=0),
+        "k": jnp.stack(kcs), "v": jnp.stack(vcs),
+    }
+    return logits, cache
+
+
+def decode_step(params, cfg: ArchConfig, rc: RunConfig, token, cache, pos,
+                constrain: Callable = Identity):
+    emb = jnp.take(params["embed"], token[:, None], axis=0)
+    n_groups, k, rem = _group_layout(cfg)
+    h = emb
+    new_conv, new_ssm = cache["conv"], cache["ssm"]
+    new_k, new_v = cache["k"], cache["v"]
+
+    def mamba_stack_decode(stacked, h, conv_c, ssm_c):
+        def body(hc, xs):
+            bp, cc, sc_ = xs
+            hn = ly.norm_apply(bp["norm"], hc, cfg.norm_eps)
+            out, st = ssm_mod.ssm_decode(bp["ssm"], hn, ssm_cfg(cfg),
+                                         {"conv": cc, "ssm": sc_})
+            return hc + out, (st["conv"], st["ssm"])
+        h, (cs, ss) = jax.lax.scan(body, h, (stacked, conv_c, ssm_c))
+        return h, cs, ss
+
+    for g in range(n_groups):
+        gp = jax.tree.map(lambda x: x[g], params["mamba"])
+        conv_c = jax.lax.dynamic_slice_in_dim(new_conv, g * k, k, 0)
+        ssm_c = jax.lax.dynamic_slice_in_dim(new_ssm, g * k, k, 0)
+        h, cs, ss = mamba_stack_decode(gp, h, conv_c, ssm_c)
+        new_conv = jax.lax.dynamic_update_slice_in_dim(new_conv, cs, g * k, 0)
+        new_ssm = jax.lax.dynamic_update_slice_in_dim(new_ssm, ss, g * k, 0)
+        a_in = ly.norm_apply(params["shared"]["attn_norm"], h, cfg.norm_eps)
+        a, (kc, vc) = ly.attn_decode(params["shared"]["attn"], a_in, attn_cfg(cfg),
+                                     new_k[g], new_v[g], pos)
+        h = h + a
+        h = h + ly.mlp_apply(params["shared"]["mlp"],
+                             ly.norm_apply(params["shared"]["mlp_norm"], h, cfg.norm_eps))
+        new_k = new_k.at[g].set(kc)
+        new_v = new_v.at[g].set(vc)
+    if rem:
+        conv_c = jax.lax.dynamic_slice_in_dim(new_conv, n_groups * k, rem, 0)
+        ssm_c = jax.lax.dynamic_slice_in_dim(new_ssm, n_groups * k, rem, 0)
+        h, cs, ss = mamba_stack_decode(params["mamba_tail"], h, conv_c, ssm_c)
+        new_conv = jax.lax.dynamic_update_slice_in_dim(new_conv, cs, n_groups * k, 0)
+        new_ssm = jax.lax.dynamic_update_slice_in_dim(new_ssm, ss, n_groups * k, 0)
+    h = ly.norm_apply(params["norm_f"], h, cfg.norm_eps)
+    logits = lo.logits_last(h[:, -1], head_weight(params, cfg))
+    return logits, {"conv": new_conv, "ssm": new_ssm, "k": new_k, "v": new_v}

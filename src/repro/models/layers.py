@@ -1,0 +1,122 @@
+"""Attention (GQA / qk-norm / QKV-bias / sliding-window / RoPE), MLP and MoE
+building blocks, functional style.
+
+Every `*_init` returns a Leaf-tree (value + logical sharding names); every
+`*_apply` is a pure function. Weight layout: activations keep d_model
+unsharded at block boundaries; weights are 2-D sharded (fsdp × tensor).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+from ..kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnCfg:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    window: Optional[int] = None           # sliding-window size (Mixtral SWA)
+    rope_theta: float = 10000.0
+    causal: bool = True
+
+
+def attn_init(key, cfg: AttnCfg, dtype):
+    D, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    sc = D ** -0.5
+    p = {
+        "wq": cm.leaf(cm.normal(ks[0], (D, H * Dh), sc, dtype), ("fsdp", "tensor")),
+        "wk": cm.leaf(cm.normal(ks[1], (D, Hkv * Dh), sc, dtype), ("fsdp", "tensor")),
+        "wv": cm.leaf(cm.normal(ks[2], (D, Hkv * Dh), sc, dtype), ("fsdp", "tensor")),
+        "wo": cm.leaf(cm.normal(ks[3], (H * Dh, D), (H * Dh) ** -0.5, dtype),
+                      ("tensor", "fsdp")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = cm.leaf(cm.zeros((H * Dh,), dtype), ("tensor",))
+        p["bk"] = cm.leaf(cm.zeros((Hkv * Dh,), dtype), ("tensor",))
+        p["bv"] = cm.leaf(cm.zeros((Hkv * Dh,), dtype), ("tensor",))
+    if cfg.qk_norm:
+        p["q_norm"] = cm.leaf(cm.ones((Dh,), dtype), (None,))
+        p["k_norm"] = cm.leaf(cm.ones((Dh,), dtype), (None,))
+    return p
+
+
+def _project_qkv(p, x, cfg: AttnCfg, positions):
+    B, L, D = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, L, H, Dh)
+    k = k.reshape(B, L, Hkv, Dh)
+    v = v.reshape(B, L, Hkv, Dh)
+    if "q_norm" in p:
+        q = cm.rms_norm(q, p["q_norm"])
+        k = cm.rms_norm(k, p["k_norm"])
+    q = cm.apply_rope(q.swapaxes(1, 2), positions[:, None, :], cfg.rope_theta)
+    k = cm.apply_rope(k.swapaxes(1, 2), positions[:, None, :], cfg.rope_theta)
+    return q, k, v.swapaxes(1, 2)  # (B, H, L, Dh) / (B, Hkv, L, Dh)
+
+
+def attn_apply(p, x, cfg: AttnCfg, positions=None, attn_impl: str = "chunked"):
+    """Self-attention over the full sequence (train / prefill)."""
+    B, L, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(L), (B, L))
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    out = ops.attention(q, k, v, causal=cfg.causal, window=cfg.window,
+                        impl=attn_impl)
+    out = out.swapaxes(1, 2).reshape(B, L, cfg.n_heads * cfg.head_dim)
+    return out @ p["wo"], (k, v)
+
+
+def attn_decode(p, x, cfg: AttnCfg, k_cache, v_cache, pos):
+    """One-token decode. x: (B, 1, D); caches (B, Hkv, S, Dh); pos: scalar.
+
+    Returns (out (B,1,D), (k_cache', v_cache')); caches updated at ``pos``.
+    """
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, pos, axis=2)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, pos, axis=2)
+    out = ops.decode_attention(q[:, :, 0], k_cache, v_cache, pos=pos,
+                               window=cfg.window)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.head_dim)
+    return out @ p["wo"], (k_cache, v_cache)
+
+
+# --- MLP ---------------------------------------------------------------------
+def mlp_init(key, d_model: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    sc_in, sc_out = d_model ** -0.5, d_ff ** -0.5
+    return {
+        "wg": cm.leaf(cm.normal(ks[0], (d_model, d_ff), sc_in, dtype), ("fsdp", "tensor")),
+        "wu": cm.leaf(cm.normal(ks[1], (d_model, d_ff), sc_in, dtype), ("fsdp", "tensor")),
+        "wd": cm.leaf(cm.normal(ks[2], (d_ff, d_model), sc_out, dtype), ("tensor", "fsdp")),
+    }
+
+
+def mlp_apply(p, x):
+    return (cm.swiglu(x @ p["wg"], x @ p["wu"])) @ p["wd"]
+
+
+# --- norms --------------------------------------------------------------------
+def norm_init(d: int, dtype):
+    return {"scale": cm.leaf(cm.ones((d,), dtype), (None,))}
+
+
+def norm_apply(p, x, eps: float = 1e-6):
+    return cm.rms_norm(x, p["scale"], eps)

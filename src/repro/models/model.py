@@ -1,0 +1,147 @@
+"""Family dispatch: one facade the launcher / dry-run / tests drive.
+
+``build(cfg, rc)`` returns a Model whose methods are pure functions of
+(params, batch) — ready for jax.jit with in/out shardings. input_specs()
+produces ShapeDtypeStruct stand-ins for every entry point (the dry-run
+allocates nothing).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+from . import encdec as encdec_mod
+from . import hybrid as hybrid_mod
+from . import transformer as tf_mod
+from .config import ArchConfig, RunConfig
+from .losses import IGNORE
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    rc: RunConfig
+
+    # ---- init ----------------------------------------------------------
+    def init(self, key):
+        """-> (params, logical_spec_tree)."""
+        if self.cfg.family == "hybrid":
+            tree = hybrid_mod.model_init(key, self.cfg, self.rc)
+        elif self.cfg.family == "encdec":
+            tree = encdec_mod.model_init(key, self.cfg, self.rc)
+        else:
+            tree = tf_mod.model_init(key, self.cfg, self.rc)
+        return cm.split(tree)
+
+    def abstract_params(self):
+        """(ShapeDtypeStruct tree, logical tree) without allocating any
+        parameter memory — the logical sharding names are static trace-time
+        metadata, captured by closure during eval_shape."""
+        captured = {}
+
+        def f(k):
+            params, logical = self.init(k)
+            captured["logical"] = logical
+            return params
+
+        shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+        return shapes, captured["logical"]
+
+    # ---- training -------------------------------------------------------
+    def loss_fn(self, params, batch, constrain: Callable = tf_mod.Identity):
+        cfg, rc = self.cfg, self.rc
+        if cfg.family == "encdec":
+            return encdec_mod.loss_fn(params, cfg, rc, batch["tokens"],
+                                      batch["labels"], frames=batch["frames"],
+                                      constrain=constrain)
+        if cfg.family == "hybrid":
+            return hybrid_mod.loss_fn(params, cfg, rc, batch["tokens"],
+                                      batch["labels"], constrain=constrain)
+        prefix = batch.get("patch_embeds")
+        return tf_mod.loss_fn(params, cfg, rc, batch["tokens"], batch["labels"],
+                              prefix_embeds=prefix, constrain=constrain)
+
+    # ---- serving ---------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int):
+        mod = {"hybrid": hybrid_mod, "encdec": encdec_mod}.get(
+            self.cfg.family, tf_mod)
+        return mod.init_cache(self.cfg, self.rc, batch, max_seq)
+
+    def prefill(self, params, batch, max_seq: int,
+                constrain: Callable = tf_mod.Identity):
+        cfg, rc = self.cfg, self.rc
+        if cfg.family == "encdec":
+            return encdec_mod.prefill(params, cfg, rc, batch["tokens"], max_seq,
+                                      frames=batch["frames"], constrain=constrain)
+        if cfg.family == "hybrid":
+            return hybrid_mod.prefill(params, cfg, rc, batch["tokens"], max_seq,
+                                      constrain=constrain)
+        return tf_mod.prefill(params, cfg, rc, batch["tokens"], max_seq,
+                              prefix_embeds=batch.get("patch_embeds"),
+                              constrain=constrain)
+
+    def decode_step(self, params, token, cache, pos,
+                    constrain: Callable = tf_mod.Identity):
+        mod = {"hybrid": hybrid_mod, "encdec": encdec_mod}.get(
+            self.cfg.family, tf_mod)
+        return mod.decode_step(params, self.cfg, self.rc, token, cache, pos,
+                               constrain=constrain)
+
+    # ---- dry-run inputs ---------------------------------------------------
+    def input_specs(self, seq_len: int, global_batch: int, mode: str = "train"):
+        """ShapeDtypeStruct stand-ins per entry point.
+
+        mode: "train" -> loss_fn batch; "prefill" -> prefill batch;
+              "decode" -> (token, cache, pos) with cache length seq_len.
+        """
+        cfg = self.cfg
+        B, L = global_batch, seq_len
+        i32 = jnp.int32
+        sd = jax.ShapeDtypeStruct
+        dt = jnp.dtype(self.rc.param_dtype)
+        if mode in ("train", "prefill"):
+            batch = {"tokens": sd((B, L), i32)}
+            if mode == "train":
+                batch["labels"] = sd((B, L), i32)
+            if cfg.family == "vlm":
+                n = cfg.n_patches
+                batch["tokens"] = sd((B, L - n), i32)
+                if mode == "train":
+                    batch["labels"] = sd((B, L - n), i32)
+                batch["patch_embeds"] = sd((B, n, cfg.d_model), dt)
+            if cfg.family == "encdec":
+                batch["frames"] = sd((B, cfg.source_len, cfg.d_model), dt)
+            return batch
+        if mode == "decode":
+            cache = jax.eval_shape(lambda: self.init_cache(B, L))
+            return {"token": sd((B,), i32), "cache": cache,
+                    "pos": sd((), i32)}
+        raise ValueError(mode)
+
+
+def build(cfg: ArchConfig, rc: Optional[RunConfig] = None) -> Model:
+    return Model(cfg, rc or RunConfig())
+
+
+def synth_batch(model: Model, key, seq_len: int, global_batch: int,
+                mode: str = "train"):
+    """Concrete random batch matching input_specs (smoke tests/examples)."""
+    specs = model.input_specs(seq_len, global_batch, mode)
+    out = {}
+    for name, s in specs.items():
+        if name == "cache":
+            out[name] = jax.tree.map(lambda t: jnp.zeros(t.shape, t.dtype), s)
+        elif jnp.issubdtype(s.dtype, jnp.integer):
+            key, k = jax.random.split(key)
+            hi = model.cfg.vocab if name in ("tokens", "labels", "token") else 2**30
+            out[name] = jax.random.randint(k, s.shape, 0, hi, s.dtype)
+        else:
+            key, k = jax.random.split(key)
+            out[name] = (jax.random.normal(k, s.shape, jnp.float32) * 0.02).astype(s.dtype)
+    if "pos" in out:
+        out["pos"] = jnp.asarray(seq_len // 2, jnp.int32)
+    return out

@@ -1,0 +1,99 @@
+"""Mixture-of-Experts layer with capacity-based dispatch (GShard-style).
+
+Token routing: top-k softmax gate -> position-within-expert via one-hot
+cumsum -> scatter into per-expert capacity buffers -> stacked-expert
+einsum (SwiGLU) -> weighted gather-combine. FLOPs scale with *active*
+experts only; the (E, C, D) buffers shard over the ``tensor`` axis (expert
+parallelism), so the scatter/gather lower to all-to-alls under pjit —
+the TPU-native version of the paper's "communicate only what moves"
+discipline. Aux loss: standard load-balancing (Switch/Mixtral).
+
+When E doesn't divide the tensor axis (Mixtral's 8 experts on a 16-wide
+axis) the expert dim degrades to replicated and the d_ff dim picks up the
+tensor sharding instead (see distributed.sharding.logical_to_spec).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    d_model: int
+    d_ff: int               # per-expert hidden
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+
+
+def moe_init(key, cfg: MoECfg, dtype):
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    sc_in, sc_out = D ** -0.5, F ** -0.5
+    return {
+        "router": cm.leaf(cm.normal(ks[0], (D, E), sc_in, jnp.float32), ("fsdp", None)),
+        "wg": cm.leaf(cm.normal(ks[1], (E, D, F), sc_in, dtype),
+                      ("expert", "fsdp", "expert_ffn")),
+        "wu": cm.leaf(cm.normal(ks[2], (E, D, F), sc_in, dtype),
+                      ("expert", "fsdp", "expert_ffn")),
+        "wd": cm.leaf(cm.normal(ks[3], (E, F, D), sc_out, dtype),
+                      ("expert", "expert_ffn", "fsdp")),
+    }
+
+
+def moe_apply(p, x, cfg: MoECfg, constrain=lambda x, logical=None: x):
+    """x: (B, L, D) -> (out, aux_loss)."""
+    B, L, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * L
+    xt = x.reshape(T, D)
+
+    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)                        # (T, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balancing auxiliary loss (mean prob * mean assignment fraction)
+    assign = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32).sum(1)        # (T, E)
+    aux = E * jnp.mean(probs.mean(0) * assign.mean(0))
+
+    # floor keeps tiny decode batches drop-free (worst case: all T tokens
+    # route their K choices to one expert)
+    capacity = int(max(K * cfg.capacity_factor * T / E, min(T * K, 8)))
+    # position of each (token, k) within its expert's buffer
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)                 # (T, K, E)
+    flatoh = onehot.reshape(T * K, E)
+    pos_in_e = jnp.cumsum(flatoh, axis=0) - flatoh                        # (T*K, E)
+    pos = jnp.sum(pos_in_e * flatoh, axis=-1).reshape(T, K)               # (T, K)
+    keep = pos < capacity                                                 # drop overflow
+    gate_vals = gate_vals * keep
+
+    # scatter tokens into (E, C, D) buffers; under EP the scatter lowers to
+    # an all-to-all, under TP-experts the capacity dim stays batch-sharded
+    buf = jnp.zeros((E, capacity, D), x.dtype)
+    e_flat = gate_idx.reshape(-1)
+    c_flat = jnp.where(keep, pos, capacity - 1).reshape(-1)
+    src = jnp.repeat(xt[:, None, :], K, axis=1).reshape(T * K, D)
+    src = jnp.where(keep.reshape(-1, 1), src, 0)
+    buf = buf.at[e_flat, c_flat].add(src)
+    buf = constrain(buf, ("expert", "moe_cap", None))
+
+    # stacked-expert SwiGLU
+    g = jnp.einsum("ecd,edf->ecf", buf, p["wg"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["wu"])
+    h = cm.swiglu(g, u)
+    h = constrain(h, ("expert", "moe_cap", "expert_ffn"))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["wd"])                      # (E, C, D)
+    out_buf = constrain(out_buf, ("expert", "moe_cap", None))
+
+    # gather-combine weighted by gates
+    picked = out_buf[e_flat, c_flat].reshape(T, K, D)
+    out = jnp.sum(picked * gate_vals[..., None].astype(x.dtype), axis=1)
+    return out.reshape(B, L, D), aux

@@ -1,0 +1,140 @@
+"""Mamba2 (SSD) layer — functional, train + prefill + decode paths.
+
+The causal short-conv runs through the stencil machinery (kernels/conv1d,
+a 1-D halo stencil — DESIGN.md §4) and the SSD scan through kernels/ssd
+(Pallas) or its chunked-jnp twin (ops._ssd_chunked_jnp) for compiled
+multi-device paths. Decode keeps (conv window, ssm state) as the cache —
+O(1) per token, which is why the ssm/hybrid archs run the long_500k cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+from ..kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMCfg:
+    d_model: int
+    d_state: int = 128       # N
+    d_conv: int = 4          # K
+    expand: int = 2
+    head_dim: int = 64       # P
+    n_groups: int = 1        # G
+    chunk: int = 64
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def d_conv_in(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def ssm_init(key, cfg: SSMCfg, dtype):
+    D, Din, H = cfg.d_model, cfg.d_inner, cfg.n_heads
+    GN = cfg.n_groups * cfg.d_state
+    d_proj = 2 * Din + 2 * GN + H  # z, x, B, C, dt
+    ks = jax.random.split(key, 5)
+    # dt bias: softplus^{-1} of log-uniform dt in [dt_min, dt_max]
+    u = jax.random.uniform(ks[3], (H,), jnp.float32)
+    dt0 = jnp.exp(u * (jnp.log(cfg.dt_max) - jnp.log(cfg.dt_min)) + jnp.log(cfg.dt_min))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))
+    A0 = jax.random.uniform(ks[4], (H,), jnp.float32, 1.0, 16.0)
+    return {
+        "in_proj": cm.leaf(cm.normal(ks[0], (D, d_proj), D ** -0.5, dtype),
+                           ("fsdp", "tensor")),
+        "conv_w": cm.leaf(cm.normal(ks[1], (cfg.d_conv, cfg.d_conv_in),
+                                    cfg.d_conv ** -0.5, dtype), (None, "tensor")),
+        "conv_b": cm.leaf(cm.zeros((cfg.d_conv_in,), dtype), ("tensor",)),
+        "dt_bias": cm.leaf(dt_bias.astype(jnp.float32), ("tensor",)),
+        "A_log": cm.leaf(jnp.log(A0), ("tensor",)),
+        "D": cm.leaf(cm.ones((H,), jnp.float32), ("tensor",)),
+        "norm": cm.leaf(cm.ones((Din,), dtype), ("tensor",)),
+        "out_proj": cm.leaf(cm.normal(ks[2], (Din, D), Din ** -0.5, dtype),
+                            ("tensor", "fsdp")),
+    }
+
+
+def _split_proj(zxbcdt, cfg: SSMCfg):
+    Din, GN, H = cfg.d_inner, cfg.n_groups * cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :Din]
+    xBC = zxbcdt[..., Din : Din + cfg.d_conv_in]
+    dt = zxbcdt[..., Din + cfg.d_conv_in :]
+    return z, xBC, dt
+
+
+def _split_xbc(xBC, cfg: SSMCfg):
+    Din, GN = cfg.d_inner, cfg.n_groups * cfg.d_state
+    x = xBC[..., :Din]
+    B = xBC[..., Din : Din + GN]
+    C = xBC[..., Din + GN :]
+    return x, B, C
+
+
+def ssm_apply(p, h, cfg: SSMCfg, ssd_impl: str = "chunked",
+              conv_impl: str = "chunked", return_state: bool = False):
+    """h: (B, L, D) -> (out, state|None). Full-sequence (train / prefill)."""
+    Bb, L, D = h.shape
+    H, P, G, N = cfg.n_heads, cfg.head_dim, cfg.n_groups, cfg.d_state
+    zxbcdt = h @ p["in_proj"]
+    z, xBC, dt_raw = _split_proj(zxbcdt, cfg)
+    xBC = ops.conv1d_causal(xBC, p["conv_w"], p["conv_b"], silu=True,
+                            impl=conv_impl)
+    x, Bm, Cm = _split_xbc(xBC, cfg)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, state = ops.ssd(
+        x.reshape(Bb, L, H, P), dt, A,
+        Bm.reshape(Bb, L, G, N), Cm.reshape(Bb, L, G, N),
+        D=p["D"], chunk=cfg.chunk, impl=ssd_impl)
+    y = y.reshape(Bb, L, cfg.d_inner)
+    y = cm.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(z.dtype), p["norm"])
+    out = y @ p["out_proj"]
+    if return_state:
+        # conv window: last K-1 *pre-activation* conv inputs
+        pad = max(cfg.d_conv - 1 - L, 0)
+        zxbcdt_tail = h[:, L - (cfg.d_conv - 1 - pad):] @ p["in_proj"]
+        xBC_tail = _split_proj(zxbcdt_tail, cfg)[1]
+        if pad:
+            xBC_tail = jnp.pad(xBC_tail, ((0, 0), (pad, 0), (0, 0)))
+        return out, {"conv": xBC_tail, "ssm": state}
+    return out, None
+
+
+def ssm_decode(p, h, cfg: SSMCfg, cache):
+    """One token. h: (B, 1, D); cache {"conv": (B, K-1, Cin), "ssm": (B,H,P,N)}."""
+    Bb = h.shape[0]
+    H, P, G, N = cfg.n_heads, cfg.head_dim, cfg.n_groups, cfg.d_state
+    zxbcdt = h[:, 0] @ p["in_proj"]
+    z, xBC_t, dt_raw = _split_proj(zxbcdt, cfg)
+    # conv over the rolling window [conv_state, current]
+    win = jnp.concatenate([cache["conv"], xBC_t[:, None]], axis=1)  # (B, K, Cin)
+    w = p["conv_w"].astype(jnp.float32)  # (K, Cin); out = sum_d w[d] x[t-d]
+    conv = jnp.sum(win.astype(jnp.float32) * w[::-1][None], axis=1) + \
+        p["conv_b"].astype(jnp.float32)
+    conv = (conv * jax.nn.sigmoid(conv)).astype(h.dtype)
+    x, Bm, Cm = _split_xbc(conv, cfg)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    rep = H // G
+    Bh = jnp.repeat(Bm.reshape(Bb, G, N), rep, axis=1)
+    Ch = jnp.repeat(Cm.reshape(Bb, G, N), rep, axis=1)
+    y, ssm_new = ops.ssd_decode_step(cache["ssm"], x.reshape(Bb, H, P), dt, A,
+                                     Bh, Ch, D=p["D"])
+    y = y.reshape(Bb, cfg.d_inner)
+    y = cm.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(z.dtype), p["norm"])
+    out = (y @ p["out_proj"])[:, None]
+    return out, {"conv": win[:, 1:], "ssm": ssm_new}

@@ -1,0 +1,281 @@
+"""Decoder-only LM stack (dense / MoE / VLM-backbone / pure-SSM families).
+
+Layers are scan-stacked: parameters carry a leading ``layers`` axis and the
+forward pass is one `lax.scan` whose body is (optionally) rematerialized —
+compile time and HLO size are depth-independent, which is what keeps the
+512-device qwen2-72b dry-run tractable.
+
+Three entry points per model: ``loss_fn`` (training), ``prefill`` and
+``decode_step`` (serving; KV / SSM-state caches as pytrees).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+from . import layers as ly
+from . import losses as lo
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .config import ArchConfig, RunConfig
+
+Identity = lambda x, logical=None: x
+AUX_COEF = 0.01
+
+
+def remat_policy(rc: "RunConfig"):
+    """None = save nothing (recompute everything); "dots" saves matmul
+    outputs, trading HBM for ~25% less backward recompute FLOPs (§Perf)."""
+    if rc.remat_policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return None
+
+
+def attn_cfg(cfg: ArchConfig) -> ly.AttnCfg:
+    return ly.AttnCfg(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim, qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm,
+        window=cfg.window, rope_theta=cfg.rope_theta)
+
+
+def ssm_cfg(cfg: ArchConfig) -> ssm_mod.SSMCfg:
+    return ssm_mod.SSMCfg(
+        d_model=cfg.d_model, d_state=cfg.ssm_state, d_conv=cfg.ssm_conv,
+        expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim, n_groups=cfg.ssm_groups)
+
+
+def moe_cfg(cfg: ArchConfig, rc: RunConfig) -> moe_mod.MoECfg:
+    return moe_mod.MoECfg(
+        d_model=cfg.d_model, d_ff=cfg.d_ff, n_experts=cfg.n_experts,
+        top_k=cfg.top_k, capacity_factor=rc.capacity_factor)
+
+
+def block_kind(cfg: ArchConfig) -> str:
+    if cfg.family == "ssm":
+        return "ssm"
+    if cfg.is_moe:
+        return "attn_moe"
+    return "attn_mlp"
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def block_init(key, cfg: ArchConfig, rc: RunConfig, dtype):
+    kind = block_kind(cfg)
+    ks = jax.random.split(key, 4)
+    if kind == "ssm":
+        return {
+            "norm": ly.norm_init(cfg.d_model, dtype),
+            "ssm": ssm_mod.ssm_init(ks[0], ssm_cfg(cfg), dtype),
+        }
+    p = {
+        "attn_norm": ly.norm_init(cfg.d_model, dtype),
+        "attn": ly.attn_init(ks[0], attn_cfg(cfg), dtype),
+        "mlp_norm": ly.norm_init(cfg.d_model, dtype),
+    }
+    if kind == "attn_moe":
+        p["moe"] = moe_mod.moe_init(ks[1], moe_cfg(cfg, rc), dtype)
+    else:
+        p["mlp"] = ly.mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def model_init(key, cfg: ArchConfig, rc: RunConfig):
+    """Returns a Leaf-tree; use common.split() -> (params, logical specs)."""
+    dtype = jnp.dtype(rc.param_dtype)
+    ks = jax.random.split(key, 4)
+    tree = {
+        "embed": cm.leaf(cm.normal(ks[0], (cfg.vocab, cfg.d_model), 0.02, dtype),
+                         ("tensor", "fsdp")),
+        "blocks": cm.stack_layers(
+            ks[1], cfg.n_layers, lambda k: block_init(k, cfg, rc, dtype)),
+        "norm_f": ly.norm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = cm.leaf(
+            cm.normal(ks[2], (cfg.d_model, cfg.vocab), cfg.d_model ** -0.5, dtype),
+            ("fsdp", "tensor"))
+    return tree
+
+
+def head_weight(params, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+def block_apply(bp, h, cfg: ArchConfig, rc: RunConfig, positions,
+                constrain: Callable = Identity):
+    """Residual stream h is sequence-parallel (batch, seq_act, None) at the
+    block boundary. The pre-attention / pre-MLP norm outputs are explicitly
+    re-constrained to full sequence so the big einsums are pure TP (weights
+    gathered over fsdp ONLY — 58 MB/layer, not 924 MB, for qwen2-72b); the
+    residual add re-constrains to seq_act, which lowers the o/down-proj's
+    psum into a reduce-scatter. This is the Korthikanti-style SP boundary —
+    the LM analogue of the paper's exchange-only-the-halo discipline
+    (§Perf iteration q2/m2)."""
+    kind = block_kind(cfg)
+    if kind == "ssm":
+        hn = ly.norm_apply(bp["norm"], h, cfg.norm_eps)
+        hn = constrain(hn, ("batch", None, None))
+        out, _ = ssm_mod.ssm_apply(bp["ssm"], hn, ssm_cfg(cfg),
+                                   ssd_impl=rc.ssd_impl, conv_impl=rc.conv_impl)
+        return constrain(h + out, ("batch", "seq_act", None)), jnp.float32(0.0)
+    a_in = ly.norm_apply(bp["attn_norm"], h, cfg.norm_eps)
+    a_in = constrain(a_in, ("batch", None, None))
+    a, _ = ly.attn_apply(bp["attn"], a_in, attn_cfg(cfg), positions,
+                         attn_impl=rc.attn_impl)
+    h = constrain(h + a, ("batch", "seq_act", None))
+    hn = ly.norm_apply(bp["mlp_norm"], h, cfg.norm_eps)
+    hn = constrain(hn, ("batch", None, None))
+    if kind == "attn_moe":
+        m, aux = moe_mod.moe_apply(bp["moe"], hn, moe_cfg(cfg, rc), constrain)
+    else:
+        m, aux = ly.mlp_apply(bp["mlp"], hn), jnp.float32(0.0)
+    return constrain(h + m, ("batch", "seq_act", None)), aux
+
+
+def forward_hidden(params, cfg: ArchConfig, rc: RunConfig, embeds,
+                   positions=None, constrain: Callable = Identity):
+    B, L, _ = embeds.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+
+    def body(h, bp):
+        h2, aux = block_apply(bp, h, cfg, rc, positions, constrain)
+        return h2, aux
+
+    if rc.remat:
+        body = jax.checkpoint(body, policy=remat_policy(rc))
+    h, auxs = jax.lax.scan(body, embeds, params["blocks"])
+    h = ly.norm_apply(params["norm_f"], h, cfg.norm_eps)
+    return h, jnp.mean(auxs)
+
+
+def embed_tokens(params, cfg: ArchConfig, tokens, prefix_embeds=None):
+    emb = jnp.take(params["embed"], tokens, axis=0)
+    if prefix_embeds is not None:  # VLM / audio stub frontends
+        emb = jnp.concatenate([prefix_embeds.astype(emb.dtype), emb], axis=1)
+    return emb
+
+
+def loss_fn(params, cfg: ArchConfig, rc: RunConfig, tokens, labels,
+            prefix_embeds=None, constrain: Callable = Identity):
+    """tokens (B, L) int32; labels (B, L) with lo.IGNORE padding."""
+    emb = embed_tokens(params, cfg, tokens, prefix_embeds)
+    if prefix_embeds is not None:
+        pad = jnp.full(prefix_embeds.shape[:2], lo.IGNORE, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    emb = constrain(emb, ("batch", "seq_act", None))
+    h, aux = forward_hidden(params, cfg, rc, emb, constrain=constrain)
+    loss = lo.chunked_softmax_xent(h, head_weight(params, cfg), labels,
+                                   chunk=rc.loss_chunk, z_loss=rc.z_loss)
+    if cfg.is_moe:
+        loss = loss + AUX_COEF * aux
+    return loss
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + decode
+# --------------------------------------------------------------------------
+def init_cache(cfg: ArchConfig, rc: RunConfig, batch: int, max_seq: int,
+               dtype=None):
+    dtype = jnp.dtype(rc.param_dtype) if dtype is None else dtype
+    Ln = cfg.n_layers
+    if block_kind(cfg) == "ssm":
+        sc = ssm_cfg(cfg)
+        return {
+            "conv": jnp.zeros((Ln, batch, sc.d_conv - 1, sc.d_conv_in), dtype),
+            "ssm": jnp.zeros((Ln, batch, sc.n_heads, sc.head_dim, sc.d_state),
+                             jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((Ln, batch, cfg.n_kv_heads, max_seq, cfg.head_dim), dtype),
+        "v": jnp.zeros((Ln, batch, cfg.n_kv_heads, max_seq, cfg.head_dim), dtype),
+    }
+
+
+def prefill(params, cfg: ArchConfig, rc: RunConfig, tokens, max_seq: int,
+            prefix_embeds=None, constrain: Callable = Identity):
+    """Full-sequence pass; returns (last-position logits (B, V), cache)."""
+    emb = embed_tokens(params, cfg, tokens, prefix_embeds)
+    B, L, _ = emb.shape
+    positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+    kind = block_kind(cfg)
+
+    def body(h, bp):
+        if kind == "ssm":
+            hn = ly.norm_apply(bp["norm"], h, cfg.norm_eps)
+            out, st = ssm_mod.ssm_apply(bp["ssm"], hn, ssm_cfg(cfg),
+                                        ssd_impl=rc.ssd_impl,
+                                        conv_impl=rc.conv_impl, return_state=True)
+            return h + out, st
+        a_in = ly.norm_apply(bp["attn_norm"], h, cfg.norm_eps)
+        a, (k, v) = ly.attn_apply(bp["attn"], a_in, attn_cfg(cfg), positions,
+                                  attn_impl=rc.attn_impl)
+        h = h + a
+        hn = ly.norm_apply(bp["mlp_norm"], h, cfg.norm_eps)
+        if kind == "attn_moe":
+            m, _ = moe_mod.moe_apply(bp["moe"], hn, moe_cfg(cfg, rc), constrain)
+        else:
+            m = ly.mlp_apply(bp["mlp"], hn)
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, max_seq - L), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, max_seq - L), (0, 0)))
+        return h + m, (kp, vp)
+
+    h, caches = jax.lax.scan(body, emb, params["blocks"])
+    h = ly.norm_apply(params["norm_f"], h, cfg.norm_eps)
+    logits = lo.logits_last(h[:, -1], head_weight(params, cfg))
+    if kind == "ssm":
+        cache = caches  # {"conv": (Ln,B,K-1,Cin), "ssm": (Ln,B,H,P,N)}
+    else:
+        cache = {"k": caches[0], "v": caches[1]}
+    return logits, cache
+
+
+def decode_step(params, cfg: ArchConfig, rc: RunConfig, token, cache, pos,
+                constrain: Callable = Identity):
+    """token (B,) int32; pos: scalar int32 (position being written).
+    Returns (logits (B, V), new cache)."""
+    emb = jnp.take(params["embed"], token[:, None], axis=0)
+    kind = block_kind(cfg)
+
+    if kind == "ssm":
+        def body(h, xs):
+            bp, conv_c, ssm_c = xs
+            hn = ly.norm_apply(bp["norm"], h, cfg.norm_eps)
+            out, st = ssm_mod.ssm_decode(bp["ssm"], hn, ssm_cfg(cfg),
+                                         {"conv": conv_c, "ssm": ssm_c})
+            return h + out, (st["conv"], st["ssm"])
+
+        h, (convs, ssms) = jax.lax.scan(
+            body, emb, (params["blocks"], cache["conv"], cache["ssm"]))
+        new_cache = {"conv": convs, "ssm": ssms}
+    else:
+        def body(h, xs):
+            bp, kc, vc = xs
+            a_in = ly.norm_apply(bp["attn_norm"], h, cfg.norm_eps)
+            a, (kc, vc) = ly.attn_decode(bp["attn"], a_in, attn_cfg(cfg), kc, vc, pos)
+            h = h + a
+            hn = ly.norm_apply(bp["mlp_norm"], h, cfg.norm_eps)
+            if block_kind(cfg) == "attn_moe":
+                m, _ = moe_mod.moe_apply(bp["moe"], hn, moe_cfg(cfg, rc),
+                                         constrain)
+            else:
+                m = ly.mlp_apply(bp["mlp"], hn)
+            return h + m, (kc, vc)
+
+        h, (ks, vs) = jax.lax.scan(body, emb, (params["blocks"], cache["k"], cache["v"]))
+        new_cache = {"k": ks, "v": vs}
+
+    h = ly.norm_apply(params["norm_f"], h, cfg.norm_eps)
+    logits = lo.logits_last(h[:, -1], head_weight(params, cfg))
+    return logits, new_cache

@@ -1,0 +1,111 @@
+"""AdamW with mixed-precision master weights, global-norm clipping and
+microbatch gradient accumulation. Pure pytree functions (no optax dep).
+
+State layout (all sharded like the params they track):
+  m, v      — f32 first/second moments
+  master    — f32 master copy when params are low-precision (bf16)
+  count     — int32 step
+Optional error-feedback state for compressed cross-pod all-reduce rides in
+``comp_err`` (see distributed/compression.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import schedules as sch
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "cosine"
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    # decay mask: skip 1-D tensors (norm scales, biases) — standard practice
+    decay_min_ndim: int = 2
+
+
+def init(params, cfg: AdamWConfig):
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "m": jax.tree.map(f32, params),
+        "v": jax.tree.map(f32, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+    if any(p.dtype != jnp.float32 for p in jax.tree.leaves(params)):
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def apply(params, grads, state, cfg: AdamWConfig):
+    """One AdamW update. Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    lr = sch.get(cfg.schedule)(count, cfg.lr, cfg.warmup_steps, cfg.total_steps)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** count.astype(jnp.float32)
+    bc2 = 1 - b2 ** count.astype(jnp.float32)
+    masters = state.get("master", params)
+
+    def upd(g, m, v, p_master, p):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= cfg.decay_min_ndim and cfg.weight_decay:
+            step = step + cfg.weight_decay * p_master
+        new_master = p_master - lr * step
+        return m, v, new_master
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_ma = treedef.flatten_up_to(masters)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, ma, p)
+           for g, m, v, ma, p in zip(flat_g, flat_m, flat_v, flat_ma, flat_p)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_master = treedef.unflatten([o[2] for o in out])
+    new_params = jax.tree.map(lambda ma, p: ma.astype(p.dtype), new_master, params)
+    new_state = {"m": new_m, "v": new_v, "count": count}
+    if "master" in state:
+        new_state["master"] = new_master
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, new_state, metrics
+
+
+def accumulate_grads(loss_fn: Callable, params, batches, n_micro: int):
+    """Gradient accumulation over ``n_micro`` microbatches via lax.scan.
+    ``batches``: pytree whose leaves have a leading (n_micro, ...) axis."""
+    def step(acc, mb):
+        loss, g = jax.value_and_grad(loss_fn)(params, mb)
+        acc_g, acc_l = acc
+        return (jax.tree.map(jnp.add, acc_g, g), acc_l + loss), None
+
+    zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (g, loss), _ = jax.lax.scan(step, (zero, jnp.float32(0)), batches)
+    inv = 1.0 / n_micro
+    return jax.tree.map(lambda x: x * inv, g), loss * inv

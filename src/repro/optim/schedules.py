@@ -1,0 +1,44 @@
+"""LR schedules: cosine, constant, and WSD (Warmup-Stable-Decay).
+
+WSD is the MiniCPM schedule (arXiv:2404.06395): linear warmup, a long
+stable plateau at peak LR, then a short exponential/linear decay tail —
+reproduced here because minicpm-2b is one of the assigned architectures.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, base_lr: float, warmup: int, total: int,
+                  final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, base_lr * cos)
+
+
+def constant(step, base_lr: float, warmup: int = 0, total: int = 0):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup, 1)
+    return jnp.where(step < warmup, warm, base_lr)
+
+
+def wsd(step, base_lr: float, warmup: int, total: int,
+        decay_frac: float = 0.1, final_frac: float = 0.01):
+    """Warmup-Stable-Decay: decay starts at (1-decay_frac)*total."""
+    step = jnp.asarray(step, jnp.float32)
+    decay_start = (1.0 - decay_frac) * total
+    warm = base_lr * step / jnp.maximum(warmup, 1)
+    stable = base_lr
+    prog = jnp.clip((step - decay_start) / jnp.maximum(total - decay_start, 1), 0, 1)
+    decay = base_lr * jnp.exp(jnp.log(final_frac) * prog)
+    out = jnp.where(step < warmup, warm, jnp.where(step < decay_start, stable, decay))
+    return out
+
+
+SCHEDULES = {"cosine": warmup_cosine, "const": constant, "wsd": wsd}
+
+
+def get(name: str):
+    return SCHEDULES[name]

@@ -1,0 +1,30 @@
+import os
+import sys
+
+# Tests must see exactly ONE device (the dry-run sets its own flags in a
+# subprocess). Multi-device tests spawn subprocesses with their own
+# XLA_FLAGS (see _multidev.py helpers).
+os.environ.setdefault("XLA_FLAGS", "")
+os.environ["JAX_PLATFORMS"] = "cpu"
+
+import numpy as np
+import pytest
+
+SEED = 20260714
+
+
+@pytest.fixture()
+def rng():
+    return np.random.RandomState(SEED)
+
+
+def run_subprocess(code: str, n_devices: int = 8, timeout: int = 560) -> str:
+    """Run a python snippet with N fake devices; returns stdout, asserts rc=0."""
+    import subprocess
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    p = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=timeout, env=env)
+    assert p.returncode == 0, f"subprocess failed:\n{p.stdout}\n{p.stderr}"
+    return p.stdout

@@ -1,0 +1,198 @@
+"""Losses, optimizer, data, checkpoint, fault handling, HLO analyzer."""
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import losses as lo
+from repro.optim import adamw, schedules
+from repro.checkpoint import CheckpointManager
+from repro.distributed import fault
+from repro.launch.hlo_analysis import ModuleCost
+
+
+# ---------------- losses ----------------
+def test_chunked_xent_matches_direct(rng):
+    B, L, D, V = 2, 24, 16, 64
+    h = jnp.asarray(rng.randn(B, L, D), jnp.float32)
+    w = jnp.asarray(rng.randn(D, V) * 0.1, jnp.float32)
+    labels = jnp.asarray(rng.randint(0, V, (B, L)), jnp.int32)
+    labels = labels.at[0, :5].set(lo.IGNORE)
+    got = lo.chunked_softmax_xent(h, w, labels, chunk=7)
+    logits = h @ w
+    logp = jax.nn.log_softmax(logits, -1)
+    mask = labels != lo.IGNORE
+    ll = jnp.take_along_axis(logp, jnp.maximum(labels, 0)[..., None], -1)[..., 0]
+    want = -jnp.sum(jnp.where(mask, ll, 0)) / jnp.sum(mask)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+def test_chunked_xent_grad_matches(rng):
+    B, L, D, V = 1, 16, 8, 32
+    h = jnp.asarray(rng.randn(B, L, D), jnp.float32)
+    w = jnp.asarray(rng.randn(D, V) * 0.1, jnp.float32)
+    labels = jnp.asarray(rng.randint(0, V, (B, L)), jnp.int32)
+    g1 = jax.grad(lambda w: lo.chunked_softmax_xent(h, w, labels, chunk=4))(w)
+    def direct(w):
+        logp = jax.nn.log_softmax(h @ w, -1)
+        ll = jnp.take_along_axis(logp, labels[..., None], -1)[..., 0]
+        return -jnp.mean(ll)
+    g2 = jax.grad(direct)(w)
+    np.testing.assert_allclose(g1, g2, atol=1e-5, rtol=1e-4)
+
+
+# ---------------- optimizer ----------------
+def test_adamw_bf16_master_weights():
+    cfg = adamw.AdamWConfig(lr=1e-2, weight_decay=0.0, warmup_steps=1,
+                            total_steps=100, schedule="const")
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    st = adamw.init(params, cfg)
+    assert "master" in st and st["master"]["w"].dtype == jnp.float32
+    g = {"w": jnp.full((4,), 1e-3, jnp.float32)}
+    p1, st, _ = adamw.apply(params, g, st, cfg)
+    # master accumulates small updates that bf16 alone would lose
+    for _ in range(10):
+        p1, st, _ = adamw.apply(p1, g, st, cfg)
+    assert p1["w"].dtype == jnp.bfloat16
+    assert float(st["master"]["w"][0]) < 1.0
+
+
+def test_grad_accumulation_matches_full_batch(rng):
+    W = jnp.asarray(rng.randn(8, 4), jnp.float32)
+    xs = jnp.asarray(rng.randn(16, 8), jnp.float32)
+    ys = jnp.asarray(rng.randn(16, 4), jnp.float32)
+
+    def loss(p, b):
+        return jnp.mean((b["x"] @ p - b["y"]) ** 2)
+
+    full_g = jax.grad(loss)(W, {"x": xs, "y": ys})
+    mb = {"x": xs.reshape(4, 4, 8), "y": ys.reshape(4, 4, 4)}
+    acc_g, _ = adamw.accumulate_grads(loss, W, mb, 4)
+    np.testing.assert_allclose(acc_g, full_g, atol=1e-6)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0), "b": jnp.full((10,), -10.0)}
+    clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+    assert abs(float(adamw.global_norm(clipped)) - 1.0) < 1e-5
+    assert float(norm) > 40
+
+
+def test_wsd_schedule_phases():
+    f = schedules.wsd
+    total, warm = 1000, 50
+    assert float(f(10, 1.0, warm, total)) == pytest.approx(0.2)
+    assert float(f(500, 1.0, warm, total)) == 1.0       # stable plateau
+    assert float(f(999, 1.0, warm, total)) < 0.05        # decay tail
+    # monotone decay in the tail
+    xs = [float(f(s, 1.0, warm, total)) for s in range(900, 1000, 10)]
+    assert all(a >= b for a, b in zip(xs, xs[1:]))
+
+
+# ---------------- checkpoint ----------------
+def test_checkpoint_atomicity_on_partial_write(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    tree = {"w": jnp.asarray(rng.randn(4, 4), jnp.float32)}
+    mgr.save(1, tree)
+    # simulate a crashed writer: leave a stale tmp dir + torn manifest
+    os.makedirs(tmp_path / "step_000000002.tmp")
+    with open(tmp_path / "step_000000002.tmp" / "manifest.json", "w") as f:
+        f.write('{"truncat')
+    restored, extra = mgr.restore({"w": jnp.zeros((4, 4))})
+    assert extra["step"] == 1
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"w": jnp.zeros((4,))})
+    with pytest.raises(ValueError):
+        mgr.restore({"w": jnp.zeros((5,))})
+
+
+def test_async_save_error_surfaces(tmp_path, monkeypatch):
+    mgr = CheckpointManager(str(tmp_path))
+
+    def boom(*a, **k):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(np, "save", boom)
+    with pytest.raises((RuntimeError, OSError)):
+        mgr.save(1, {"w": jnp.zeros((2,))}, blocking=False)
+        mgr.wait()
+
+
+# ---------------- fault / stragglers ----------------
+def test_straggler_and_dead_detection(tmp_path):
+    mons = [fault.StepMonitor(host_id=i, heartbeat_dir=str(tmp_path),
+                              straggler_factor=1.5, timeout_s=100)
+            for i in range(4)]
+    now = time.time()
+    for i, m in enumerate(mons):
+        for step in range(5):
+            m.record(step, 1.0 if i != 2 else 3.0)  # host 2 is slow
+    health = mons[0].check_peers()
+    assert health["stragglers"] == [2]
+    assert health["dead"] == []
+    # host 3 goes silent
+    data = json.load(open(tmp_path / "host_3.json"))
+    data["t"] = now - 1000
+    json.dump(data, open(tmp_path / "host_3.json", "w"))
+    health = mons[0].check_peers()
+    assert 3 in health["dead"]
+
+
+def test_retry_recovers():
+    calls = {"n": 0}
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("transient")
+        return 42
+    assert fault.retry(flaky, attempts=5, backoff_s=0.0) == 42
+
+
+# ---------------- HLO analyzer calibration ----------------
+def test_analyzer_matches_cost_analysis_on_matmul():
+    def f(x, w):
+        return x @ w
+    c = jax.jit(f).lower(jax.ShapeDtypeStruct((32, 64), jnp.float32),
+                         jax.ShapeDtypeStruct((64, 16), jnp.float32)).compile()
+    ca = c.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    mc = ModuleCost(c.as_text()).cost()
+    assert mc.flops == pytest.approx(float(ca["flops"]))
+
+
+def test_analyzer_multiplies_scan_trip_count():
+    def f(x, W):
+        def body(h, w):
+            return h @ w, None
+        return jax.lax.scan(body, x, W)[0]
+    flops = {}
+    for n in (2, 8):
+        c = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((16, 32), jnp.float32),
+            jax.ShapeDtypeStruct((n, 32, 32), jnp.float32)).compile()
+        flops[n] = ModuleCost(c.as_text()).cost().flops
+        assert flops[n] == pytest.approx(n * 2 * 16 * 32 * 32)
+    # and cost_analysis does NOT (the reason the analyzer exists)
+    ca = c.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    assert float(ca["flops"]) < flops[8]
+
+
+def test_analyzer_inplace_cache_update_bytes():
+    def g(cache, upd, i):
+        return jax.lax.dynamic_update_slice_in_dim(cache, upd, i, axis=0)
+    c = jax.jit(g, donate_argnums=(0,)).lower(
+        jax.ShapeDtypeStruct((100000, 64), jnp.float32),
+        jax.ShapeDtypeStruct((1, 64), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32)).compile()
+    mc = ModuleCost(c.as_text()).cost()
+    assert mc.bytes < 10000  # touched bytes only, not the 25 MB cache

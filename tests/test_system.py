@@ -1,0 +1,64 @@
+"""End-to-end behaviour tests: the full train->checkpoint->resume->serve
+path through the public API (the launcher the dry-run compiles)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.train import TrainLoopConfig, train
+from repro.launch.serve import ServeConfig, serve
+
+
+def test_train_loss_decreases_and_resumes(tmp_path):
+    loop = TrainLoopConfig(steps=16, seq_len=64, global_batch=4,
+                           ckpt_dir=str(tmp_path), ckpt_every=8, log_every=50)
+    _, _, hist = train("mamba2-130m", loop, smoke=True, log_fn=lambda *_: None)
+    assert len(hist) == 16
+    assert hist[-1] < hist[0], (hist[0], hist[-1])
+    assert all(np.isfinite(h) for h in hist)
+
+    # resume continues from the checkpoint, not from scratch
+    loop2 = TrainLoopConfig(steps=20, seq_len=64, global_batch=4,
+                            ckpt_dir=str(tmp_path), resume=True,
+                            ckpt_every=50, log_every=50)
+    _, _, hist2 = train("mamba2-130m", loop2, smoke=True, log_fn=lambda *_: None)
+    assert len(hist2) == 4  # steps 16..19 only
+    assert hist2[0] < hist[0]  # warm start
+
+
+def test_resume_bitwise_matches_uninterrupted(tmp_path):
+    """Fault-tolerance contract: crash+restore reproduces the exact same
+    trajectory as the uninterrupted run (deterministic data + exact state).
+    Constant LR schedule so the horizon doesn't differ between the
+    interrupted and full runs."""
+    from repro.models import RunConfig
+    rc = lambda: RunConfig(param_dtype="float32", remat=False, loss_chunk=32,
+                           schedule="const", warmup_steps=1)
+    kw = dict(seq_len=32, global_batch=2)
+    loop_a = TrainLoopConfig(steps=10, ckpt_dir=str(tmp_path / "a"),
+                             ckpt_every=100, log_every=100, **kw)
+    _, _, hist_a = train("stablelm-3b", loop_a, rc=rc(), smoke=True,
+                         log_fn=lambda *_: None)
+    loop_b1 = TrainLoopConfig(steps=5, ckpt_dir=str(tmp_path / "b"),
+                              ckpt_every=5, log_every=100, **kw)
+    train("stablelm-3b", loop_b1, rc=rc(), smoke=True, log_fn=lambda *_: None)
+    loop_b2 = TrainLoopConfig(steps=10, ckpt_dir=str(tmp_path / "b"),
+                              resume=True, ckpt_every=100, log_every=100, **kw)
+    _, _, hist_b = train("stablelm-3b", loop_b2, rc=rc(), smoke=True,
+                         log_fn=lambda *_: None)
+    np.testing.assert_allclose(hist_a[5:], hist_b, rtol=1e-5)
+
+
+def test_serve_generates(tmp_path):
+    gen, stats = serve("mamba2-130m",
+                       ServeConfig(batch=2, prompt_len=12, gen_len=6,
+                                   temperature=0.0),
+                       smoke=True, log_fn=lambda *_: None)
+    assert gen.shape == (2, 6)
+    assert stats["tok_per_s"] > 0
+    # greedy decode is deterministic
+    gen2, _ = serve("mamba2-130m",
+                    ServeConfig(batch=2, prompt_len=12, gen_len=6,
+                                temperature=0.0),
+                    smoke=True, log_fn=lambda *_: None)
+    np.testing.assert_array_equal(gen, gen2)
