@@ -29,7 +29,7 @@ def _step_aos(arr, dt):
     return arr.at[1:-1, 1:-1, 1:-1, :].add(dt * upd)
 
 
-def bench(n: int = 96, iters: int = 10):
+def bench(n: int = 96, iters: int = 10, nsteps: int = 2):
     g = Grid((n,) * 3)
     fs = FieldSet(g)
     v_soa = fs.vector(3, init=1.0, layout="soa")
@@ -40,20 +40,49 @@ def bench(n: int = 96, iters: int = 10):
     aos = jax.jit(lambda a: _step_aos(a, dt))
     m_soa = teff.measure(lambda: soa(v_soa.components), iters=iters)
     m_aos = teff.measure(lambda: aos(v_aos.components), iters=iters)
+
+    # temporally-blocked variants: k unrolled sweeps in one jit'd launch,
+    # scored against the per-launch ideal traffic (a_eff / k)
+    def _multi(step1):
+        def run(x):
+            for _ in range(nsteps):
+                x = step1(x, dt)
+            return x
+        return jax.jit(run)
+
+    soa_k = _multi(_step_soa)
+    aos_k = _multi(_step_aos)
+    m_soa_k = teff.measure(lambda: soa_k(v_soa.components), iters=iters)
+    m_aos_k = teff.measure(lambda: aos_k(v_aos.components), iters=iters)
+
     a_eff = teff.a_eff(g.n_points, n_read=3, n_write=3, itemsize=4)
+    a_blk = teff.a_eff_blocked(g.n_points, n_read=3, n_write=3, itemsize=4,
+                               nsteps=nsteps)
+    host_bw = teff.measure_host_bandwidth()
     return {
+        "nsteps": nsteps,
         "soa_us": m_soa.median_s * 1e6,
         "aos_us": m_aos.median_s * 1e6,
         "soa_teff_GBs": m_soa.t_eff(a_eff) / 1e9,
         "aos_teff_GBs": m_aos.t_eff(a_eff) / 1e9,
+        "soa_frac_of_host_peak": m_soa.t_eff(a_eff) / host_bw,
+        "aos_frac_of_host_peak": m_aos.t_eff(a_eff) / host_bw,
+        "soa_frac_of_host_peak_blocked":
+            (a_blk / (m_soa_k.median_s / nsteps)) / host_bw,
+        "aos_frac_of_host_peak_blocked":
+            (a_blk / (m_aos_k.median_s / nsteps)) / host_bw,
         "soa_over_aos": m_aos.median_s / m_soa.median_s,
     }
 
 
 def main():
     r = bench()
-    print(f"layout_soa,{r['soa_us']:.1f},T_eff={r['soa_teff_GBs']:.2f}GB/s")
-    print(f"layout_aos,{r['aos_us']:.1f},T_eff={r['aos_teff_GBs']:.2f}GB/s")
+    print(f"layout_soa,{r['soa_us']:.1f},T_eff={r['soa_teff_GBs']:.2f}GB/s "
+          f"frac={r['soa_frac_of_host_peak']:.3f} "
+          f"frac_blocked_k{r['nsteps']}={r['soa_frac_of_host_peak_blocked']:.3f}")
+    print(f"layout_aos,{r['aos_us']:.1f},T_eff={r['aos_teff_GBs']:.2f}GB/s "
+          f"frac={r['aos_frac_of_host_peak']:.3f} "
+          f"frac_blocked_k{r['nsteps']}={r['aos_frac_of_host_peak_blocked']:.3f}")
     print(f"layout_soa_speedup,{r['soa_over_aos']:.2f},x")
     return r
 

@@ -15,7 +15,7 @@ import sys
 
 _CHILD = r"""
 import time, numpy as np, jax, jax.numpy as jnp
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 from repro.core import init_parallel_stencil, fd3d as fd
 from repro.distributed import overlap

@@ -7,23 +7,40 @@ Rows mirror the paper's comparison:
   * ``broadcast``     — "array programming" baseline: the same update as a
                         chain of unfused whole-array ops (op-by-op eager),
                         the paper's CUDA.jl / Julia-broadcast comparison.
-  * ``pallas(interp)``— the Pallas TPU kernel in interpret mode (CPU
-                        correctness path; wall-time not meaningful, listed
-                        for completeness).
+  * ``seq_k`` /
+    ``fused_k``       — temporal blocking (``--nsteps k``): k sequential
+                        single-step launches with double-buffer rotation vs
+                        the fused k-step path (one jit'd k-sweep program —
+                        the StencilKernel.run_steps realization that maps
+                        to the k-halo Pallas kernel on TPU).
 
 T_eff = A_eff / t with A_eff = (1 write + 2 reads) * n * sizeof(f32): T2
-written, T and Ci read (the paper's counting for Fig. 1). T_peak for the
-CPU rows is a measured STREAM-copy bandwidth; the TPU v5e roofline fraction
-is *derived* in EXPERIMENTS.md §Roofline from the dry-run (no TPU here).
+written, T and Ci read (the paper's counting for Fig. 1). Under temporal
+blocking the per-launch ideal traffic divides by k (teff.a_eff_blocked),
+so both the *classic* fraction (per-sweep traffic) and the *blocked*
+fraction (per-launch traffic) are reported. T_peak for the CPU rows is a
+measured STREAM-copy bandwidth; the TPU v5e roofline fraction is *derived*
+in the README §Roofline from the dry-run (no TPU here).
+
+``--nsteps k`` also records the comparison to ``BENCH_teff_n{N}_k{K}.json``
+so perf regressions of the fused path are visible in CI.
 """
 from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.diffusion3d import BENCH_128, BENCH_256, Diffusion3DConfig
-from repro.core import Grid, teff
+from repro.core import Grid, fd3d as fd, init_parallel_stencil, teff
 from repro.kernels import ops, ref
 
 
@@ -31,23 +48,26 @@ def _setup(cfg: Diffusion3DConfig):
     g = Grid(cfg.shape, (cfg.lx, cfg.ly, cfg.lz))
     key = jax.random.PRNGKey(0)
     T = jax.random.uniform(key, cfg.shape, jnp.float32) + 1.0
+    T2 = T.copy()  # distinct write buffer, as the solvers allocate
     Ci = jnp.full(cfg.shape, 1.0 / cfg.c0, jnp.float32)
     dt = g.stable_diffusion_dt(cfg.lam / cfg.c0)
-    return g, T, Ci, dt
+    return g, T, T2, Ci, dt
 
 
-def bench(cfg: Diffusion3DConfig = BENCH_128, iters: int = 20):
-    g, T, Ci, dt = _setup(cfg)
+def bench(cfg: Diffusion3DConfig = BENCH_128, iters: int = 20,
+          host_bw: float | None = None):
+    g, T, T2, Ci, dt = _setup(cfg)
     inv = g.inv_spacing
     a_eff = teff.a_eff(g.n_points, n_read=2, n_write=1, itemsize=4)
-    host_bw = teff.measure_host_bandwidth()
+    if host_bw is None:
+        host_bw = teff.measure_host_bandwidth()
     rows = []
 
-    # fused kernel (jit)
+    # fused kernel (jit) — distinct T2/T double buffer
     step = jax.jit(lambda T2, T: ref.diffusion3d_step(T2, T, Ci, cfg.lam, dt,
                                                       *inv))
-    m = teff.measure(lambda: step(T, T), iters=iters)
-    rows.append(("kernel_jit", m, a_eff))
+    m = teff.measure(lambda: step(T2, T), iters=iters)
+    rows.append(("kernel_jit", m, a_eff, 1))
 
     # broadcast baseline: op-by-op, unfused, materializing temporaries
     def broadcast_step(T2, T):
@@ -62,36 +82,145 @@ def bench(cfg: Diffusion3DConfig = BENCH_128, iters: int = 20):
         return T2.at[1:-1, 1:-1, 1:-1].set(upd)
 
     with jax.disable_jit():
-        m = teff.measure(lambda: broadcast_step(T, T), iters=max(iters // 2, 5))
-    rows.append(("broadcast_eager", m, a_eff))
+        m = teff.measure(lambda: broadcast_step(T2, T), iters=max(iters // 2, 5))
+    rows.append(("broadcast_eager", m, a_eff, 1))
 
     out = []
-    for name, m, a in rows:
-        t_eff = m.t_eff(a)
-        out.append({
-            "name": name, "n": cfg.nx,
-            "median_s": m.median_s,
-            "ci95_s": m.ci95_s,
-            "t_eff_GBs": t_eff / 1e9,
-            "host_bw_GBs": host_bw / 1e9,
-            "frac_of_host_peak": t_eff / host_bw,
-        })
+    for name, m, a, k in rows:
+        out.append(_row(name, cfg, m, a, k, host_bw))
     return out
 
 
-def main(out_rows=None):
+def _row(name, cfg, m, a_eff_step, nsteps, host_bw, fused=False):
+    """Per-step timing row. ``fused`` marks a genuinely k-fused launch:
+    only then does the per-launch ideal traffic divide by k — k *separate*
+    launches still move the full A_eff each, so their blocked fraction
+    equals the classic one."""
+    per_step_s = m.median_s / nsteps
+    t_eff = a_eff_step / per_step_s  # classic: each sweep moves the fields
+    n = cfg.nx
+    a_blocked = a_eff_step / nsteps if fused else a_eff_step
+    return {
+        "name": name, "n": n, "nsteps": nsteps,
+        "median_s": m.median_s,
+        "per_step_s": per_step_s,
+        "ci95_s": m.ci95_s,
+        "t_eff_GBs": t_eff / 1e9,
+        "host_bw_GBs": host_bw / 1e9,
+        "frac_of_host_peak": t_eff / host_bw,
+        "frac_of_host_peak_blocked": (a_blocked / per_step_s) / host_bw,
+    }
+
+
+def bench_temporal(cfg: Diffusion3DConfig, nsteps: int, iters: int = 20,
+                   host_bw: float | None = None):
+    """k sequential single-step launches vs the fused k-step path."""
+    g, T, T2, Ci, dt = _setup(cfg)
+    inv = g.inv_spacing
+    a_eff = teff.a_eff(g.n_points, n_read=2, n_write=1, itemsize=4)
+    if host_bw is None:
+        host_bw = teff.measure_host_bandwidth()
+    sc = dict(lam=cfg.lam, dt=dt, _dx=inv[0], _dy=inv[1], _dz=inv[2])
+
+    ps = init_parallel_stencil(backend="jnp", ndims=3)
+
+    @ps.parallel(outputs=("T2",), rotations={"T2": "T"})
+    def kern(T2, T, Ci, lam, dt, _dx, _dy, _dz):
+        return {"T2": fd.inn(T) + dt * (lam * fd.inn(Ci) * (
+            fd.d2_xi(T) * _dx ** 2 + fd.d2_yi(T) * _dy ** 2 +
+            fd.d2_zi(T) * _dz ** 2))}
+
+    # k sequential launches, rotating the double buffer between launches
+    step1 = jax.jit(lambda a, b: kern(T2=a, T=b, Ci=Ci, **sc))
+
+    def seq():
+        a, b = T2, T
+        for _ in range(nsteps):
+            a = step1(a, b)
+            a, b = b, a
+        return b
+
+    # fused: one jit'd k-step program (k unrolled sweeps; XLA elides the
+    # intermediate buffers — the CPU realization of the k-halo TPU kernel)
+    fused = jax.jit(lambda a, b: kern.run_steps(nsteps, T2=a, T=b, Ci=Ci, **sc))
+
+    m_seq = teff.measure(seq, iters=iters)
+    m_fused = teff.measure(lambda: fused(T2, T), iters=iters)
+    np.testing.assert_array_equal(np.asarray(seq()), np.asarray(fused(T2, T)))
+
+    rows = [
+        _row(f"seq_{nsteps}x1step", cfg, m_seq, a_eff, nsteps, host_bw),
+        _row(f"fused_{nsteps}step", cfg, m_fused, a_eff, nsteps, host_bw,
+             fused=True),
+    ]
+    speedup = m_seq.median_s / m_fused.median_s
+    return rows, speedup
+
+
+def main(out_rows=None, nsteps: int = 1, iters: int = 20, sizes=None,
+         json_path: str | None = None):
     all_rows = []
-    for cfg in (BENCH_128, BENCH_256):
-        all_rows += bench(cfg)
+    cfgs = sizes if sizes is not None else (BENCH_128, BENCH_256)
+    # one STREAM probe for the whole report: every row's roofline fraction
+    # shares a single T_peak denominator
+    host_bw = teff.measure_host_bandwidth()
+    for cfg in cfgs:
+        all_rows += bench(cfg, iters=iters, host_bw=host_bw)
     speedup = all_rows[0]["t_eff_GBs"] / all_rows[1]["t_eff_GBs"]
+    temporal_speedups: dict[int, float] = {}
+    if nsteps > 1:
+        for cfg in cfgs:
+            rows, sp = bench_temporal(cfg, nsteps, iters=iters,
+                                      host_bw=host_bw)
+            all_rows += rows
+            temporal_speedups[cfg.nx] = sp
     for r in all_rows:
-        print(f"teff_{r['name']}_{r['n']},{r['median_s']*1e6:.1f},"
-              f"T_eff={r['t_eff_GBs']:.2f}GB/s frac={r['frac_of_host_peak']:.3f}")
-    print(f"teff_speedup_kernel_vs_broadcast_128,{speedup:.2f},x")
+        print(f"teff_{r['name']}_{r['n']},{r['per_step_s']*1e6:.1f},"
+              f"T_eff={r['t_eff_GBs']:.2f}GB/s frac={r['frac_of_host_peak']:.3f}"
+              f" frac_blocked={r['frac_of_host_peak_blocked']:.3f}")
+    print(f"teff_speedup_kernel_vs_broadcast_{all_rows[0]['n']},{speedup:.2f},x")
+    for n, sp in temporal_speedups.items():
+        print(f"teff_speedup_fused{nsteps}_vs_seq_{n},{sp:.2f},x")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"rows": all_rows, "nsteps": nsteps,
+                       "fused_vs_seq_speedup":
+                           {str(n): sp for n, sp in temporal_speedups.items()}},
+                      f, indent=1)
+        print(f"# wrote {json_path}")
     if out_rows is not None:
         out_rows.extend(all_rows)
-    return all_rows
+    # the gate value: worst size measured, so a regression anywhere fails
+    worst = min(temporal_speedups.values()) if temporal_speedups else None
+    return all_rows, worst
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nsteps", type=int, default=1,
+                    help="temporal blocking depth k (k>1 adds seq-vs-fused rows)")
+    ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--size", type=int, default=None,
+                    help="single n^3 size instead of the default 128/256 pair")
+    ap.add_argument("--json", default=None,
+                    help="output JSON path (default BENCH_teff_n{N}_k{K}.json "
+                         "when --nsteps > 1)")
+    ap.add_argument("--check-speedup", type=float, default=None,
+                    help="exit nonzero unless fused/seq speedup >= this")
+    args = ap.parse_args()
+
+    sizes = None
+    if args.size is not None:
+        import dataclasses
+        sizes = [dataclasses.replace(BENCH_128, nx=args.size, ny=args.size,
+                                     nz=args.size)]
+    json_path = args.json
+    if json_path is None and args.nsteps > 1:
+        tag = f"n{args.size}" if args.size is not None else "n128_256"
+        json_path = f"BENCH_teff_{tag}_k{args.nsteps}.json"
+    _, sp = main(nsteps=args.nsteps, iters=args.iters, sizes=sizes,
+                 json_path=json_path)
+    if args.check_speedup is not None:
+        if sp is None or sp < args.check_speedup:
+            print(f"FAIL: fused/seq speedup {sp} < {args.check_speedup}")
+            sys.exit(1)

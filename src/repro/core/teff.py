@@ -51,6 +51,37 @@ def a_eff(n_points: int, n_read: int, n_write: int, itemsize: int) -> int:
     return (n_read + n_write) * n_points * itemsize
 
 
+def a_eff_blocked(n_points: int, n_read: int, n_write: int, itemsize: int,
+                  nsteps: int = 1) -> float:
+    """Ideal per-step HBM traffic under k-step temporal blocking.
+
+    A k-fused launch moves each counted field across HBM once per *k* steps,
+    so the per-step effective volume divides by k. T_eff computed against
+    this volume can exceed the single-sweep memory roofline — that is the
+    point of temporal blocking. ``nsteps=1`` degenerates to :func:`a_eff`.
+    """
+    return a_eff(n_points, n_read, n_write, itemsize) / max(int(nsteps), 1)
+
+
+def halo_compute_overhead(block, radius: int, nsteps: int) -> float:
+    """Fraction of *redundant* gridpoint-updates a k-fused launch performs
+    relative to k ideal sweeps over the block.
+
+    Sweep s of a temporally-blocked kernel updates the block extended by
+    ``(k-1-s)*radius`` cells per side (the shrinking halo cone), so blocks
+    recompute their neighbors' edge cells. When this ratio grows faster
+    than the k-fold A_eff saving, larger k stops paying off — that is the
+    classic temporal-blocking trade-off (redundant work vs traffic).
+    """
+    k = max(int(nsteps), 1)
+    block = tuple(int(b) for b in block)
+    ideal = k * math.prod(block)
+    total = sum(
+        math.prod(b + 2 * (k - 1 - s) * radius for b in block) for s in range(k)
+    )
+    return total / ideal - 1.0
+
+
 def t_eff(a_eff_bytes: float, seconds: float) -> float:
     """Effective throughput in bytes/s."""
     return a_eff_bytes / seconds

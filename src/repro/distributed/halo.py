@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..compat import axis_size as _axis_size
+
 
 def _slab(arr, axis: int, start: int, size: int):
     idx = [slice(None)] * arr.ndim
@@ -49,7 +51,7 @@ def halo_exchange(
         periodic = [periodic] * len(mesh_axes)
     r = radius
     for mesh_ax, arr_ax, per in zip(mesh_axes, array_axes, periodic):
-        n = lax.axis_size(mesh_ax)
+        n = _axis_size(mesh_ax)
         if n == 1:
             if per:
                 # self-wrap: ghost layers come from own opposite interior

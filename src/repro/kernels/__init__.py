@@ -1,5 +1,5 @@
 """Pallas TPU kernels for the compute hot-spots, with jnp oracles in ref.py
 and jit'd public wrappers in ops.py."""
-from . import ref, stencil
+from . import autotune, ref, stencil
 
-__all__ = ["ref", "stencil"]
+__all__ = ["autotune", "ref", "stencil"]

@@ -1,0 +1,246 @@
+"""Empirical launch autotuner: sweep (tile, nsteps) and keep the winner.
+
+ParallelStencil derives launch parameters analytically (stencil.derive_launch);
+this module closes the loop empirically, the way production stencil
+frameworks (and XLA's own autotuner) do: run each candidate configuration
+through ``teff.measure`` and cache the fastest per (shape, dtype, radius,
+n_fields) — so the search cost is paid once per problem class per process
+(and optionally persisted to JSON across processes).
+
+The candidate space is deliberately small and deterministic:
+
+  * tiles — the analytically-derived block plus a few divisor-preserving
+    perturbations of the non-minor axes (the minor axis stays lane-aligned);
+  * nsteps — temporal-blocking depths; per-step time is what is compared,
+    so a k-fused candidate wins only when its redundant halo compute is
+    cheaper than the HBM traffic it saves.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+
+from ..core import teff
+from . import stencil as _stencil
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    tile: tuple[int, ...]
+    nsteps: int
+    per_step_s: float
+    candidates_tried: int
+
+    def to_json(self) -> dict:
+        return {"tile": list(self.tile), "nsteps": self.nsteps,
+                "per_step_s": self.per_step_s,
+                "candidates_tried": self.candidates_tried}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "TuneResult":
+        return cls(tuple(d["tile"]), int(d["nsteps"]), float(d["per_step_s"]),
+                   int(d.get("candidates_tried", 0)))
+
+
+_CACHE: dict[tuple, TuneResult] = {}
+
+
+def _divisors(n: int) -> list[int]:
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+def tile_candidates(
+    shape: Sequence[int],
+    radius: int,
+    n_fields: int,
+    itemsize: int,
+    vmem_budget: int = _stencil.DEFAULT_VMEM_BUDGET,
+    max_candidates: int = 4,
+) -> list[tuple[int, ...]]:
+    """Derived block plus divisor-preserving halvings/doublings of the
+    leading (non-minor) axes, all within the VMEM budget."""
+    shape = tuple(int(s) for s in shape)
+    nd = len(shape)
+    _, base = _stencil.derive_launch(shape, radius, n_fields, itemsize,
+                                     vmem_budget)
+    halo = radius
+
+    def fits(blk):
+        return (n_fields * math.prod(b + 2 * halo for b in blk) * itemsize
+                <= vmem_budget)
+
+    cands = [base]
+    for axis in range(max(nd - 1, 1)):
+        for factor in (2, 0.5):
+            b = int(base[axis] * factor)
+            if b < 1 or b > shape[axis] or shape[axis] % b:
+                continue
+            cand = tuple(b if a == axis else base[a] for a in range(nd))
+            if fits(cand) and cand not in cands:
+                cands.append(cand)
+    return cands[:max_candidates]
+
+
+def cache_key(shape, dtype, radius: int, n_fields: int, tag: str = "",
+              nsteps_candidates: Sequence[int] = (),
+              tiles=None, vmem_budget: int = 0) -> tuple:
+    """Memo key covers the full search space: a call with a different
+    candidate set must re-tune, not inherit another sweep's winner."""
+    return (tag, tuple(int(s) for s in shape), jnp.dtype(dtype).name,
+            int(radius), int(n_fields),
+            tuple(int(k) for k in nsteps_candidates),
+            None if tiles is None else tuple(tuple(int(b) for b in t)
+                                             for t in tiles),
+            int(vmem_budget))
+
+
+def autotune(
+    make_step: Callable[[tuple[int, ...], int], Callable[[], object]],
+    *,
+    shape: Sequence[int],
+    dtype,
+    radius: int = 1,
+    n_fields: int = 3,
+    itemsize: int | None = None,
+    nsteps_candidates: Sequence[int] = (1, 2, 4),
+    tiles: Sequence[Sequence[int]] | None = None,
+    vmem_budget: int = _stencil.DEFAULT_VMEM_BUDGET,
+    iters: int = 5,
+    tag: str = "",
+    cache_path: str | None = None,
+) -> TuneResult:
+    """Find the fastest (tile, nsteps) for a stencil problem class.
+
+    ``make_step(tile, nsteps)`` must return a zero-arg callable advancing
+    ``nsteps`` time steps with that configuration (typically a jit'd
+    ``StencilKernel.run_steps`` closure). Per-step median wall time decides.
+    Results are memoized per (shape, dtype, radius, n_fields, tag) in
+    process memory and, when ``cache_path`` is given, in a JSON file.
+    """
+    key = cache_key(shape, dtype, radius, n_fields, tag, nsteps_candidates,
+                    tiles, vmem_budget)
+    if key in _CACHE:
+        return _CACHE[key]
+    if cache_path and os.path.exists(cache_path):
+        disk = _load_cache(cache_path)
+        hit = disk.get(_key_str(key))
+        if hit is not None:
+            _CACHE[key] = hit
+            return hit
+
+    itemsize = jnp.dtype(dtype).itemsize if itemsize is None else itemsize
+    derived_tiles = tiles is None
+    if derived_tiles:
+        tiles = tile_candidates(shape, radius, n_fields, itemsize, vmem_budget)
+    best: TuneResult | None = None
+    tried = 0
+    for tile in tiles:
+        tile = tuple(int(b) for b in tile)
+        for k in nsteps_candidates:
+            k = int(k)
+            if derived_tiles:
+                # Temporal blocking widens the halo to k*radius; enforce the
+                # VMEM budget at the depth actually being measured.
+                # (Explicitly-passed tiles bypass this: the caller may be
+                # tuning a backend where the budget is irrelevant, e.g. jnp.)
+                window = (n_fields * math.prod(b + 2 * radius * k
+                                               for b in tile) * itemsize)
+                if window > vmem_budget:
+                    continue
+            try:
+                fn = make_step(tile, k)
+                m = teff.measure(fn, iters=iters, warmup=1)
+            except Exception:
+                continue  # candidate not realizable (tile/shape mismatch etc.)
+            tried += 1
+            per_step = m.median_s / k
+            if best is None or per_step < best.per_step_s:
+                best = TuneResult(tile, k, per_step, tried)
+    if best is None:
+        raise RuntimeError("no autotune candidate was runnable")
+    best = dataclasses.replace(best, candidates_tried=tried)
+    _CACHE[key] = best
+    if cache_path:
+        disk = _load_cache(cache_path) if os.path.exists(cache_path) else {}
+        disk[_key_str(key)] = best
+        _save_cache(cache_path, disk)
+    return best
+
+
+def autotune_diffusion3d(
+    shape: Sequence[int],
+    dtype="float32",
+    backend: str = "jnp",
+    nsteps_candidates: Sequence[int] = (1, 2, 4),
+    iters: int = 5,
+    cache_path: str | None = None,
+) -> TuneResult:
+    """Tune the Fig. 1 diffusion solver on this host.
+
+    Uses the ``StencilKernel`` path (jit'd ``run_steps``) so the measured
+    configuration is exactly what the solver runs. The jnp backend is the
+    performance path on CPU hosts; on TPU pass ``backend="pallas"``.
+    """
+    import jax
+    import numpy as np
+
+    from ..core import init_parallel_stencil, fd3d as fd
+
+    shape = tuple(int(s) for s in shape)
+    dtype = jnp.dtype(dtype)
+    rng = np.random.RandomState(0)
+    T = jnp.asarray(rng.rand(*shape), dtype)
+    T2 = T.copy()  # distinct write buffer, as the solvers allocate
+    Ci = jnp.asarray(rng.rand(*shape) + 0.5, dtype)
+    sc = dict(lam=1.0, dt=1e-6, _dx=float(shape[0] - 1),
+              _dy=float(shape[1] - 1), _dz=float(shape[2] - 1))
+
+    # The jnp backend has no tiling knob — only sweep nsteps there.
+    tiles = None
+    if backend == "jnp":
+        _, base = _stencil.derive_launch(shape, 1, 3, dtype.itemsize)
+        tiles = [base]
+
+    def make_step(tile, k):
+        ps = init_parallel_stencil(backend=backend, dtype=dtype, ndims=3)
+
+        @ps.parallel(outputs=("T2",), tile=tile, rotations={"T2": "T"})
+        def kern(T2, T, Ci, lam, dt, _dx, _dy, _dz):
+            return {"T2": fd.inn(T) + dt * (lam * fd.inn(Ci) * (
+                fd.d2_xi(T) * _dx ** 2 + fd.d2_yi(T) * _dy ** 2 +
+                fd.d2_zi(T) * _dz ** 2))}
+
+        step = jax.jit(lambda T2, T: kern.run_steps(k, T2=T2, T=T, Ci=Ci, **sc))
+        return lambda: step(T2, T)
+
+    return autotune(
+        make_step, shape=shape, dtype=dtype, radius=1, n_fields=3,
+        nsteps_candidates=nsteps_candidates, tiles=tiles, iters=iters,
+        tag=f"diffusion3d/{backend}", cache_path=cache_path,
+    )
+
+
+# ---------------- JSON persistence ----------------
+def _key_str(key: tuple) -> str:
+    return json.dumps(key, separators=(",", ":"))
+
+
+def _load_cache(path: str) -> dict[str, TuneResult]:
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+        return {k: TuneResult.from_json(v) for k, v in raw.items()}
+    except (OSError, ValueError, KeyError):
+        return {}
+
+
+def _save_cache(path: str, cache: dict[str, TuneResult]) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({k: v.to_json() for k, v in cache.items()}, f, indent=1)
+    os.replace(tmp, path)

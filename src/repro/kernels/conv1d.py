@@ -3,7 +3,7 @@
 This is the paper's technique applied to an LM architecture: the causal
 short-conv in every Mamba2 block *is* a 1-D stencil with a one-sided halo
 of width K-1, so it runs through the exact same machinery as the PDE
-kernels — halo-extended `pl.Element` VMEM windows over the sequence axis,
+kernels — halo-extended VMEM windows over the sequence axis,
 with a validity mask standing in for the zero left-padding.
 
 x: (B, L, C), w: (K, C) depthwise taps, optional bias (C,).
@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .stencil import halo_window_spec
 
 
 def _body(x_ref, w_ref, b_ref, o_ref, *, K, BL, silu):
@@ -43,8 +45,8 @@ def _build(B, L, C, K, BL, dtype_name, silu, interpret):
         body,
         grid=(B, L // BL),
         in_specs=[
-            pl.BlockSpec((1, pl.Element(BL + K - 1, padding=(K - 1, 0)), C),
-                         lambda b, j: (b, j * BL, 0)),
+            halo_window_spec((1, BL, C), ((0, 0), (K - 1, 0), (0, 0)),
+                             lambda b, j: (b, j * BL, 0)),
             pl.BlockSpec((K, C), lambda b, j: (0, 0)),
             pl.BlockSpec((C,), lambda b, j: (0,)),
         ],

@@ -3,9 +3,16 @@
 This is the "explicit notation" variant of the solver (paper §3 compares
 math-close vs explicit): the stencil is written with raw window slices
 instead of the fd.* operators, and the kernel is tuned by hand (tile
-override, fused scalar folding). Numerically identical to
-``ref.diffusion3d_step`` and to the math-close kernel built through
-``core.parallel`` — tests assert all three agree.
+override, fused scalar folding, all-parallel ``dimension_semantics``,
+in-place ``input_output_aliases`` double-buffer rotation). Numerically
+identical to ``ref.diffusion3d_step`` and to the math-close kernel built
+through ``core.parallel`` — tests assert all three agree.
+
+``nsteps=k`` runs the temporally-blocked variant: the VMEM windows carry a
+k-cell halo and the Euler update is swept k times per launch, so T/Ci cross
+HBM once per k steps. The result is bitwise-identical to k rotated
+single-step calls whenever T2 and T agree on the boundary ring (true for
+the solvers: both buffers start as copies; boundaries are never updated).
 """
 from __future__ import annotations
 
@@ -20,51 +27,87 @@ from jax.experimental.pallas import tpu as pltpu
 from . import stencil as _stencil
 
 
-def _body(scal_ref, T2_ref, T_ref, Ci_ref, o_ref, *, block, shape):
+def _body(scal_ref, T2_ref, T_ref, Ci_ref, o_ref, *, block, shape, nsteps):
     lam, dt, idx2, idy2, idz2 = (scal_ref[i] for i in range(5))
     T = T_ref[...]
     Ci = Ci_ref[...]
-    c = T[1:-1, 1:-1, 1:-1]
-    lap = (
-        (T[2:, 1:-1, 1:-1] - 2 * c + T[:-2, 1:-1, 1:-1]) * idx2
-        + (T[1:-1, 2:, 1:-1] - 2 * c + T[1:-1, :-2, 1:-1]) * idy2
-        + (T[1:-1, 1:-1, 2:] - 2 * c + T[1:-1, 1:-1, :-2]) * idz2
-    )
-    upd = c + dt * (lam * Ci[1:-1, 1:-1, 1:-1] * lap)
-    mask = _stencil._interior_mask(block, shape, 1)
-    o_ref[...] = jnp.where(mask, upd.astype(o_ref.dtype), T2_ref[...][1:-1, 1:-1, 1:-1])
+    for s in range(nsteps):
+        c = T[1:-1, 1:-1, 1:-1]
+        lap = (
+            (T[2:, 1:-1, 1:-1] - 2 * c + T[:-2, 1:-1, 1:-1]) * idx2
+            + (T[1:-1, 2:, 1:-1] - 2 * c + T[1:-1, :-2, 1:-1]) * idy2
+            + (T[1:-1, 1:-1, 2:] - 2 * c + T[1:-1, 1:-1, :-2]) * idz2
+        )
+        upd = c + dt * (lam * Ci[1:-1, 1:-1, 1:-1] * lap)
+        ext = nsteps - 1 - s  # remaining halo extent after this sweep
+        mask = _stencil._interior_mask(block, shape, 1, ext)
+        if s < nsteps - 1:
+            # Rotate in-register: the sweep's T2 becomes the next sweep's T;
+            # globally-boundary cells keep carrying their original values.
+            T = jnp.where(mask, upd.astype(T.dtype), c)
+            Ci = Ci[1:-1, 1:-1, 1:-1]
+        else:
+            k = nsteps
+            prev = T2_ref[...][k:-k, k:-k, k:-k]
+            o_ref[...] = jnp.where(mask, upd.astype(o_ref.dtype), prev)
 
 
 @functools.lru_cache(maxsize=32)
-def _build(shape, dtype_name, tile, interpret):
+def _build(shape, dtype_name, tile, interpret, nsteps, alias):
     dtype = jnp.dtype(dtype_name)
-    grid, block = _stencil.derive_launch(shape, 1, 3, dtype.itemsize, tile=tile)
-    win = tuple(pl.Element(b + 2, padding=(1, 1)) for b in block)
-    body = functools.partial(_body, block=block, shape=shape)
+    grid, block = _stencil.derive_launch(shape, 1, 3, dtype.itemsize, tile=tile,
+                                         nsteps=nsteps)
+    halo = nsteps
+
+    def win_map(i, j, k):
+        return (i * block[0], j * block[1], k * block[2])
+
+    body = functools.partial(_body, block=block, shape=shape, nsteps=nsteps)
+    kwargs = {}
+    if alias:
+        # input order: (scal, T2, T, Ci) -> donate T2's buffer to the output
+        # so the double-buffer rotates in place instead of allocating.
+        kwargs["input_output_aliases"] = {1: 0}
+    if not interpret:
+        cp = _stencil.compiler_params(3)
+        if cp is not None:
+            kwargs["compiler_params"] = cp
     return pl.pallas_call(
         body,
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec(win, lambda i, j, k: (i * block[0], j * block[1], k * block[2])),
-            pl.BlockSpec(win, lambda i, j, k: (i * block[0], j * block[1], k * block[2])),
-            pl.BlockSpec(win, lambda i, j, k: (i * block[0], j * block[1], k * block[2])),
+            _stencil.halo_window_spec(block, (halo,) * 3, win_map),
+            _stencil.halo_window_spec(block, (halo,) * 3, win_map),
+            _stencil.halo_window_spec(block, (halo,) * 3, win_map),
         ],
         out_specs=pl.BlockSpec(block, lambda i, j, k: (i, j, k)),
         out_shape=jax.ShapeDtypeStruct(shape, dtype),
         interpret=interpret,
+        **kwargs,
     )
 
 
 def diffusion3d_step(T2, T, Ci, lam, dt, inv_dx, inv_dy, inv_dz,
-                     tile=None, interpret=None):
-    """Fused Pallas diffusion step; returns the new T2 (full array)."""
+                     tile=None, interpret=None, nsteps=1, alias=None):
+    """Fused Pallas diffusion step(s); returns the temperature after
+    ``nsteps`` explicit Euler steps as one full array (one launch).
+
+    ``alias=True`` donates T2's buffer to the output (in-place rotation).
+    Default: alias on real TPU only — eager donation on the interpret path
+    invalidates the caller's T2, which the CPU test suites still read.
+    """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    if alias is None:
+        alias = not interpret
+    nsteps = int(nsteps)
+    if nsteps < 1:
+        raise ValueError(f"nsteps must be >= 1, got {nsteps}")
     dtype = T.dtype
     scal = jnp.array(
         [lam, dt, inv_dx**2, inv_dy**2, inv_dz**2], dtype=dtype
     )
     call = _build(tuple(T.shape), dtype.name, tile if tile is None else tuple(tile),
-                  bool(interpret))
+                  bool(interpret), nsteps, bool(alias))
     return call(scal, T2, T, Ci)

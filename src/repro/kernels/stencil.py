@@ -5,9 +5,10 @@ thread block stages a halo-extended tile of the input fields in shared
 memory/registers and sweeps it. The TPU-native equivalent built here:
 
   * the Pallas *grid* tiles the full array; every input field gets a
-    **halo-extended VMEM window** expressed with ``pl.Element`` block
-    dimensions (element-indexed, overlapping windows with OOB padding) —
-    this is the BlockSpec realization of shared-memory blocking;
+    **halo-extended VMEM window** (element-indexed, overlapping windows
+    with OOB padding — ``pl.Element`` dims on new jax, the equivalent
+    ``Unblocked`` indexing mode on jax <= 0.4.x) — this is the BlockSpec
+    realization of shared-memory blocking;
   * the kernel body evaluates the *same math-close update function* the
     ``jnp`` backend uses, on the window, producing the block-interior
     update;
@@ -17,11 +18,20 @@ memory/registers and sweeps it. The TPU-native equivalent built here:
   * scalars ride in SMEM;
   * launch parameters (grid + block shapes) are **derived automatically**
     from the array bounds, stencil radius and a VMEM budget, mirroring
-    ParallelStencil's automatic launch-parameter derivation.
+    ParallelStencil's automatic launch-parameter derivation;
+  * **temporal blocking** (``nsteps=k``): the VMEM window halo grows to
+    ``k*radius`` and the update function is swept ``k`` times inside one
+    launch, the valid region shrinking by ``radius`` per sweep. Each field
+    then crosses HBM once per *k* steps instead of once per step, cutting
+    A_eff by ~k at the cost of redundant halo-cone recompute per block.
 
-Caveat (documented): the update function must not read an *output* field's
+Caveats (documented): the update function must not read an *output* field's
 halo ring (its window is only used as the boundary-copy source). All paper
-solvers satisfy this — e.g. Fig. 1's ``T2`` is write-only.
+solvers satisfy this — e.g. Fig. 1's ``T2`` is write-only. With ``nsteps>1``
+the k-step result is bitwise-identical to k rotated single-step calls
+provided the rotation buffers agree on their boundary rings (true for all
+solvers here: both buffers start as copies and boundaries are never
+updated).
 """
 from __future__ import annotations
 
@@ -58,6 +68,7 @@ def derive_launch(
     itemsize: int,
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
     tile: Sequence[int] | None = None,
+    nsteps: int = 1,
 ) -> tuple[tuple[int, ...], tuple[int, ...]]:
     """Derive (grid, block_shape) from array bounds — ParallelStencil's
     automatic launch-parameter derivation, with TPU tiling constraints.
@@ -65,10 +76,13 @@ def derive_launch(
     The minor (last) axis prefers 128-lane multiples, the next-to-minor
     8-sublane multiples. Blocks must divide the array extents (the caller
     pads otherwise). The block set is shrunk until the halo-extended
-    windows of all fields fit the VMEM budget.
+    windows of all fields fit the VMEM budget. With temporal blocking
+    (``nsteps > 1``) the window halo is ``nsteps * radius`` per side, so
+    the same budget yields smaller blocks.
     """
     shape = tuple(int(s) for s in shape)
     nd = len(shape)
+    halo = radius * max(int(nsteps), 1)
     if tile is not None:
         block = tuple(int(b) for b in tile)
         if len(block) != nd or any(s % b for s, b in zip(shape, block)):
@@ -81,7 +95,7 @@ def derive_launch(
         ]
 
         def window_bytes(blk):
-            return n_fields * math.prod(b + 2 * radius for b in blk) * itemsize
+            return n_fields * math.prod(b + 2 * halo for b in blk) * itemsize
 
         # Shrink the largest non-minor axis first; keep lane alignment longest.
         while window_bytes(block) > vmem_budget:
@@ -98,13 +112,58 @@ def derive_launch(
     return grid, block
 
 
-def _interior_mask(block: tuple[int, ...], shape: tuple[int, ...], radius: int):
-    """Boolean mask over this block marking globally-interior cells."""
+def halo_window_spec(
+    block: Sequence[int],
+    halo: Sequence[int | tuple[int, int]],
+    index_map: Callable,
+) -> pl.BlockSpec:
+    """BlockSpec for an overlapping, halo-extended VMEM window.
+
+    ``halo`` gives the per-dimension (lo, hi) extension (an int means
+    symmetric). ``index_map`` must return *element* offsets in the padded
+    coordinate system — for a stride-``block`` tiling that is simply
+    ``pid * block`` per dim. Out-of-bounds cells read as garbage/NaN and
+    must be masked by the kernel body.
+
+    Version compat: jax >= 0.5 expresses this with ``pl.Element`` block
+    dims; jax 0.4.x spells the identical semantics as the ``Unblocked``
+    indexing mode with padding.
+    """
+    halo = tuple((h, h) if isinstance(h, int) else (int(h[0]), int(h[1]))
+                 for h in halo)
+    if hasattr(pl, "Element"):
+        dims = tuple(
+            pl.Element(b + lo + hi, padding=(lo, hi))
+            for b, (lo, hi) in zip(block, halo)
+        )
+        return pl.BlockSpec(dims, index_map)
+    win = tuple(b + lo + hi for b, (lo, hi) in zip(block, halo))
+    return pl.BlockSpec(win, index_map, indexing_mode=pl.Unblocked(halo))
+
+
+def compiler_params(nd: int):
+    """All-parallel ``dimension_semantics`` for an nd stencil grid (every
+    block is independent), letting Mosaic pipeline block revisits. Returns
+    None when this jax has no TPU compiler-params surface."""
+    cp = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None
+    )
+    if cp is None:
+        return None
+    return cp(dimension_semantics=("parallel",) * nd)
+
+
+def _interior_mask(block: tuple[int, ...], shape: tuple[int, ...], radius: int,
+                   extent: int = 0):
+    """Boolean mask marking globally-interior cells over this block extended
+    by ``extent`` cells per side (extent=0: the block itself; temporal
+    sweeps mask progressively shrinking super-blocks)."""
     nd = len(block)
+    mshape = tuple(b + 2 * extent for b in block)
     m = None
     for a in range(nd):
         pid = pl.program_id(a)
-        g = pid * block[a] + jax.lax.broadcasted_iota(jnp.int32, block, a)
+        g = pid * block[a] - extent + jax.lax.broadcasted_iota(jnp.int32, mshape, a)
         ma = (g >= radius) & (g < shape[a] - radius)
         m = ma if m is None else (m & ma)
     return m
@@ -122,12 +181,20 @@ def build_stencil_call(
     tile: Sequence[int] | None = None,
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
     interpret: bool | None = None,
+    nsteps: int = 1,
+    rotations: Mapping[str, str] | None = None,
 ) -> Callable[..., dict[str, jax.Array]]:
-    """Build a fused Pallas stencil step.
+    """Build a fused Pallas stencil step (or a k-step temporal block).
 
     ``update_fn(fields, scalars) -> {out_name: interior_update}`` is traced
     on halo-extended VMEM windows. Returns ``run(fields, scalars)`` mapping
     full arrays -> dict of full output arrays.
+
+    With ``nsteps=k > 1`` the update is swept k times inside the kernel:
+    the windows carry a ``k*radius`` halo, each sweep shrinks them by
+    ``radius`` per side, and ``rotations[out_name]`` names the input field
+    the sweep's output becomes for the next sweep (the in-kernel analogue
+    of the solver's ``T, T2 = T2, T`` double-buffer rotation).
     """
     shape = tuple(int(s) for s in shape)
     nd = len(shape)
@@ -135,21 +202,39 @@ def build_stencil_call(
     field_names = tuple(field_names)
     out_names = tuple(out_names)
     scalar_names = tuple(scalar_names)
+    nsteps = int(nsteps)
+    if nsteps < 1:
+        raise ValueError(f"nsteps must be >= 1, got {nsteps}")
     for o in out_names:
         if o not in field_names:
             raise ValueError(
                 f"output {o!r} must also be an input field (boundary-copy source)"
             )
+    if nsteps > 1:
+        rotations = dict(rotations or {})
+        missing = set(out_names) - set(rotations)
+        if missing:
+            raise ValueError(
+                f"nsteps={nsteps} needs rotations for outputs {sorted(missing)} "
+                "(e.g. rotations={'T2': 'T'}: each sweep's T2 becomes next sweep's T)"
+            )
+        for o, tgt in rotations.items():
+            if tgt not in field_names:
+                raise ValueError(f"rotation target {tgt!r} is not a field")
+            if tgt in out_names:
+                raise ValueError(
+                    f"rotation target {tgt!r} is an output; outputs only "
+                    "provide boundary values and cannot receive sweep results"
+                )
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
     grid, block = derive_launch(
-        shape, radius, len(field_names), dtype.itemsize, vmem_budget, tile
+        shape, radius, len(field_names), dtype.itemsize, vmem_budget, tile,
+        nsteps=nsteps,
     )
     r = radius
-    win = tuple(
-        pl.Element(b + 2 * r, padding=(r, r)) for b in block
-    )
+    halo = r * nsteps
 
     def in_index_map(*pids):
         return tuple(pid * b for pid, b in zip(pids, block))
@@ -160,12 +245,26 @@ def build_stencil_call(
     n_s, n_f = len(scalar_names), len(field_names)
     center = tuple(slice(r, r + b) for b in block)
 
+    def _crop(a, w: int):
+        return a[tuple(slice(w, d - w) for d in a.shape)]
+
     def body(*refs):
         scal_refs = refs[:n_s]
         in_refs = refs[n_s : n_s + n_f]
         out_refs = refs[n_s + n_f :]
         scalars = {n: ref[0] for n, ref in zip(scalar_names, scal_refs)}
         windows = {n: ref[...] for n, ref in zip(field_names, in_refs)}
+        for s in range(nsteps - 1):
+            updates = update_fn(windows, scalars)
+            ext = (nsteps - 1 - s) * r  # remaining halo extent after this sweep
+            mask = _interior_mask(block, shape, r, ext)
+            windows = {n: _crop(w, r) for n, w in windows.items()}
+            for o in out_names:
+                tgt = rotations[o]
+                # Boundary cells keep carrying their original values (the
+                # boundary condition is constant across sweeps).
+                windows[tgt] = jnp.where(mask, updates[o].astype(dtype),
+                                         windows[tgt])
         updates = update_fn(windows, scalars)
         missing = set(out_names) - set(updates)
         if missing:
@@ -176,10 +275,17 @@ def build_stencil_call(
             oref[...] = jnp.where(mask, updates[name].astype(dtype), prev)
 
     in_specs = [pl.BlockSpec(memory_space=pltpu.SMEM) for _ in scalar_names]
-    in_specs += [pl.BlockSpec(win, in_index_map) for _ in field_names]
+    in_specs += [
+        halo_window_spec(block, (halo,) * nd, in_index_map) for _ in field_names
+    ]
     out_specs = [pl.BlockSpec(block, out_index_map) for _ in out_names]
     out_shape = [jax.ShapeDtypeStruct(shape, dtype) for _ in out_names]
 
+    kwargs = {}
+    if not interpret:
+        cp = compiler_params(nd)
+        if cp is not None:
+            kwargs["compiler_params"] = cp
     call = pl.pallas_call(
         body,
         grid=grid,
@@ -187,6 +293,7 @@ def build_stencil_call(
         out_specs=out_specs[0] if len(out_names) == 1 else out_specs,
         out_shape=out_shape[0] if len(out_names) == 1 else out_shape,
         interpret=interpret,
+        **kwargs,
     )
 
     def run(fields: Mapping[str, jax.Array], scalars: Mapping[str, jax.Array]):
@@ -204,5 +311,8 @@ def build_stencil_call(
 
     run.grid = grid
     run.block = block
-    run.window_bytes = len(field_names) * math.prod(b + 2 * r for b in block) * dtype.itemsize
+    run.nsteps = nsteps
+    run.window_bytes = len(field_names) * math.prod(
+        b + 2 * halo for b in block
+    ) * dtype.itemsize
     return run

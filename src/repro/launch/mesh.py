@@ -11,20 +11,26 @@ state (the dry-run sets XLA_FLAGS *before* first jax init).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 exposes explicit axis types
+    from jax.sharding import AxisType
+except ImportError:  # older jax: meshes are implicitly "auto"
+    AxisType = None
+
+
+def _mesh_kwargs(n_axes: int) -> dict:
+    return {} if AxisType is None else {"axis_types": (AxisType.Auto,) * n_axes}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_mesh_kwargs(len(axes)))
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh with the same axis-type convention (tests, examples)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes), **_mesh_kwargs(len(axes)))
 
 
 def make_host_mesh(max_devices: int | None = None, axes=("data", "model")):

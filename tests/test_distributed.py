@@ -9,7 +9,7 @@ from conftest import run_subprocess
 def test_halo_overlap_and_multistep():
     out = run_subprocess("""
 import jax, jax.numpy as jnp, numpy as np
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 from repro.core import init_parallel_stencil, fd3d as fd
 from repro.distributed import halo, overlap
@@ -55,10 +55,69 @@ assert err < 1e-6
     assert "MULTISTEP_ERR" in out
 
 
+def test_deep_halo_temporal_blocking():
+    """One radius=k*r exchange + k fused local steps must reproduce the
+    single-device k-step solution on the owned interiors (the distributed
+    face of temporal blocking: k x fewer messages)."""
+    out = run_subprocess("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
+from repro.core import init_parallel_stencil, fd3d as fd
+from repro.distributed import halo, overlap
+from repro.launch.mesh import make_mesh
+
+K = 3  # temporal block depth; ghost width = K * radius
+mesh = make_mesh((2, 2), ("x", "y"))
+Ni, Nz = 24, 10
+Ng = Ni + 2 * K  # global array with K-wide physical boundary ring
+rng = np.random.RandomState(0)
+Tg = jnp.asarray(rng.rand(Ng, Ng, Nz), jnp.float32)
+Cig = jnp.asarray(rng.rand(Ng, Ng, Nz) + 0.5, jnp.float32)
+sc = dict(lam=1.0, dt=1e-4, _dx=1.0, _dy=1.0, _dz=1.0)
+
+ps = init_parallel_stencil(backend="jnp", ndims=3)
+@ps.parallel(outputs=("T2",), rotations={"T2": "T"})
+def kern(T2, T, Ci, lam, dt, _dx, _dy, _dz):
+    return {"T2": fd.inn(T) + dt*(lam*fd.inn(Ci)*(fd.d2_xi(T)*_dx**2
+            + fd.d2_yi(T)*_dy**2 + fd.d2_zi(T)*_dz**2))}
+
+# single-device reference: K rotated steps
+a, b = Tg, Tg
+for _ in range(K):
+    a = kern(T2=a, T=b, Ci=Cig, **sc)
+    a, b = b, a
+Tr = b
+
+lT = halo.global_to_local(Tg, (2, 2), radius=K)
+lC = halo.global_to_local(Cig, (2, 2), radius=K)
+ls = lT[0].shape
+Ts = jnp.asarray(np.stack(lT).reshape(2, 2, *ls))
+Cs = jnp.asarray(np.stack(lC).reshape(2, 2, *ls))
+
+def steps(Tl, Cl):
+    Tl, Cl = Tl[0, 0], Cl[0, 0]
+    fields = dict(T2=Tl, T=Tl, Ci=Cl)
+    out, _ = overlap.multi_step(kern, fields, sc, ("T",), ("x", "y"), K)
+    return out[None, None]
+
+f = shard_map(steps, mesh=mesh, in_specs=(P("x","y"), P("x","y")),
+              out_specs=P("x","y"), check_vma=False)
+got = halo.local_to_global(list(np.asarray(f(Ts, Cs)).reshape(4, *ls)),
+                           (2, 2), radius=K)
+# owned interiors (depth >= K from the global ring) must match exactly
+err = float(np.max(np.abs(np.asarray(got)[K:-K, K:-K]
+                          - np.asarray(Tr)[K:-K, K:-K])))
+print("DEEP_HALO_ERR", err)
+assert err < 1e-6
+""")
+    assert "DEEP_HALO_ERR" in out
+
+
 def test_periodic_halo_wraps():
     out = run_subprocess("""
 import jax, jax.numpy as jnp, numpy as np
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 from repro.distributed import halo
 from repro.launch.mesh import make_mesh
@@ -106,7 +165,7 @@ print("FLASH_DECODE_OK")
 def test_compressed_psum_and_error_feedback():
     out = run_subprocess("""
 import jax, jax.numpy as jnp, numpy as np
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 from repro.distributed import compression
 from repro.launch.mesh import make_mesh
@@ -182,7 +241,7 @@ def test_halo_radius2_overlap():
     bitwise like radius-1."""
     out = run_subprocess("""
 import jax, jax.numpy as jnp, numpy as np
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 from repro.core import init_parallel_stencil
 from repro.distributed import halo, overlap

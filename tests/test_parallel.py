@@ -115,6 +115,55 @@ def test_derive_launch_respects_tile_override():
     assert block == (8, 8, 64) and grid == (8, 8, 1)
     with pytest.raises(ValueError):
         derive_launch((64, 64, 64), 1, 3, 4, tile=(7, 8, 64))
+    with pytest.raises(ValueError):  # rank mismatch
+        derive_launch((64, 64, 64), 1, 3, 4, tile=(8, 64))
+
+
+def test_derive_launch_vmem_budget_shrinks_blocks():
+    """A tighter budget must shrink the halo-extended working set while the
+    blocks keep dividing the array extents."""
+    shape = (256, 256, 256)
+    big = 8 << 20
+    small = 1 << 20
+    _, b_big = derive_launch(shape, 1, 3, 4, vmem_budget=big)
+    _, b_small = derive_launch(shape, 1, 3, 4, vmem_budget=small)
+
+    def window(blk, halo=1):
+        return 3 * np.prod([b + 2 * halo for b in blk]) * 4
+
+    assert window(b_small) <= small
+    assert window(b_small) < window(b_big)
+    assert all(s % b == 0 for s, b in zip(shape, b_small))
+
+
+def test_derive_launch_alignment_preferences():
+    """Minor axis prefers 128-lane multiples, next-to-minor 8-sublane
+    multiples, whenever the extents allow it."""
+    _, block = derive_launch((64, 64, 256), 1, 3, 4)
+    assert block[-1] % 128 == 0
+    assert block[-2] % 8 == 0
+    # extents with no aligned divisor still yield a valid launch
+    grid, block = derive_launch((17, 34, 51), 1, 3, 4)
+    assert all(g * b == s for g, b, s in zip(grid, block, (17, 34, 51)))
+
+
+def test_derive_launch_nsteps_halo_arithmetic():
+    """Temporal blocking widens the VMEM halo to nsteps*radius: the same
+    budget must yield a window set that still fits, and the halo term in
+    the working set follows k*r."""
+    shape = (256, 256, 256)
+    budget = 2 << 20
+    for radius, nsteps in [(1, 2), (1, 4), (2, 2)]:
+        grid, block = derive_launch(shape, radius, 3, 4, vmem_budget=budget,
+                                    nsteps=nsteps)
+        halo = radius * nsteps
+        window = 3 * np.prod([b + 2 * halo for b in block]) * 4
+        assert window <= budget, (radius, nsteps, block)
+        assert all(s % b == 0 for s, b in zip(shape, block))
+    # deeper blocking can only shrink (or keep) the block volume
+    _, b1 = derive_launch(shape, 1, 3, 4, vmem_budget=budget, nsteps=1)
+    _, b4 = derive_launch(shape, 1, 3, 4, vmem_budget=budget, nsteps=4)
+    assert np.prod(b4) <= np.prod(b1)
 
 
 def test_launch_info_exposed(rng):
