@@ -61,7 +61,7 @@ def main():
         bench_teff.main()
 
     print("# --- paper S3: solver translation efficiency ---")
-    bench_solvers.main()
+    bench_solvers.main(["--skip-coupled"] if args.quick else [])
 
     print("# --- paper C5: SoA vs AoS data layout ---")
     from benchmarks import bench_layout

@@ -1,0 +1,6 @@
+"""Example solvers (importable modules with thin CLIs).
+
+Each solver exposes ``make_step``/``solve`` so tests and benchmarks can
+drive the exact physics the CLI runs; ``python examples/<name>.py`` stays
+the demo entry point (with ``PYTHONPATH=src``).
+"""

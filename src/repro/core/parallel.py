@@ -24,9 +24,19 @@ The same kernel source runs on every backend (the xPU property):
     (kernels/stencil.py). On non-TPU hosts it validates via interpret mode.
 
 Arguments are classified by value: arrays of the kernel's dimensionality
-are *fields* (must share one shape), everything else is a *scalar*. Every
-name in ``outputs`` must be a field argument; its previous contents provide
-the boundary values (the paper's ``@inn(T2) = ...`` semantics).
+are *fields*, everything else is a *scalar*. Every name in ``outputs``
+must be a field argument; its previous contents provide the boundary
+values (the paper's ``@inn(T2) = ...`` semantics).
+
+Coupled systems: ``outputs`` may name several fields — the whole coupled
+update runs as ONE fused Pallas launch. Fields may be staggered: a field
+up to ``radius`` shorter than the (per-axis maximal) base shape lives on
+cell faces, e.g. the Darcy flux ``qx`` of shape ``(nx-1, ny)`` next to
+cell-centered ``phi``/``Pe`` of shape ``(nx, ny)``. Per-output write
+semantics follow the shape of the returned update along each axis:
+``base - 2*radius`` extent writes the interior (``@inn``, boundary ring
+preserved), full-field extent writes everything (``@all`` — mandatory on
+staggered axes). See kernels/stencil.py for the window geometry.
 """
 from __future__ import annotations
 
@@ -108,26 +118,49 @@ class StencilKernel:
                 scalars[name] = v
         if not fields:
             raise ValueError("no field arguments found")
-        shapes = {np.shape(v) for v in fields.values()}
-        if len(shapes) != 1:
-            raise ValueError(f"fields must share one shape, got {shapes}")
+        shapes = {n: tuple(np.shape(v)) for n, v in fields.items()}
+        base = tuple(
+            max(s[a] for s in shapes.values()) for a in range(self.ps.ndims)
+        )
+        r = self.radius
+        for n, s in shapes.items():
+            off = tuple(b - x for b, x in zip(base, s))
+            if any(o > r for o in off):
+                raise ValueError(
+                    f"field {n!r} shape {s} is inconsistent with the coupled "
+                    f"system's base shape {base}: per-axis offsets {off} "
+                    f"exceed the staggering band [0, radius={r}] — fields of "
+                    "one system must agree up to face/cell staggering"
+                )
         for o in self.outputs:
             if o not in fields:
                 raise ValueError(f"output {o!r} is not a field argument")
-        return fields, scalars, shapes.pop()
+        return fields, scalars, base, shapes
 
     # -- backends -----------------------------------------------------------
-    def _run_jnp(self, fields, scalars):
+    def _run_jnp(self, fields, scalars, base):
         updates = self.fn(**fields, **scalars)
         r = self.radius
-        inner = tuple(slice(r, -r) for _ in range(self.ps.ndims))
-        return {
-            name: fields[name].at[inner].set(updates[name].astype(self.ps.dtype))
-            for name in self.outputs
-        }
+        out = {}
+        for name in self.outputs:
+            prev = fields[name]
+            upd = updates[name].astype(self.ps.dtype)
+            # Per-axis write semantics from the update's shape — the SAME
+            # derivation the pallas backend applies to windows (including
+            # the staggered-axes-must-be-`all` rule), so a kernel that
+            # traces on one backend traces on both.
+            off = tuple(b - s for b, s in zip(base, prev.shape))
+            modes = _stencil._write_modes(upd.shape, prev.shape, r, off, name)
+            idx = tuple(
+                slice(None) if m == "all" else slice(r, prev.shape[a] - r)
+                for a, m in enumerate(modes)
+            )
+            out[name] = prev.at[idx].set(upd)
+        return out
 
-    def _run_pallas(self, fields, scalars, shape, nsteps: int = 1):
-        key = (shape, tuple(sorted(fields)), tuple(sorted(scalars)), nsteps)
+    def _run_pallas(self, fields, scalars, base, shapes, nsteps: int = 1):
+        key = (base, tuple(sorted(shapes.items())), tuple(sorted(scalars)),
+               nsteps)
         run = self._cache.get(key)
         if run is None:
             field_names = tuple(fields)
@@ -141,7 +174,7 @@ class StencilKernel:
                 field_names=field_names,
                 out_names=self.outputs,
                 scalar_names=scalar_names,
-                shape=shape,
+                shape=base,
                 radius=self.radius,
                 dtype=self.ps.dtype,
                 tile=self.tile,
@@ -149,16 +182,17 @@ class StencilKernel:
                 interpret=self.ps.interpret,
                 nsteps=nsteps,
                 rotations=self.rotations,
+                field_shapes=shapes,
             )
             self._cache[key] = run
         return run(fields, scalars)
 
     def __call__(self, **kwargs):
-        fields, scalars, shape = self._split(kwargs)
+        fields, scalars, base, shapes = self._split(kwargs)
         if self.ps.backend == "pallas":
-            outs = self._run_pallas(fields, scalars, shape)
+            outs = self._run_pallas(fields, scalars, base, shapes)
         else:
-            outs = self._run_jnp(fields, scalars)
+            outs = self._run_jnp(fields, scalars, base)
         if len(self.outputs) == 1:
             return outs[self.outputs[0]]
         return outs
@@ -186,9 +220,9 @@ class StencilKernel:
                 "run_steps(nsteps>1) requires rotations covering every output "
                 "(pass rotations={'T2': 'T'}-style mapping to @parallel)"
             )
-        fields, scalars, shape = self._split(kwargs)
+        fields, scalars, base, shapes = self._split(kwargs)
         if self.ps.backend == "pallas":
-            outs = self._run_pallas(fields, scalars, shape, nsteps)
+            outs = self._run_pallas(fields, scalars, base, shapes, nsteps)
         else:
             # True double-buffer rotation, unrolled: sweep s scatters into
             # the stale buffer of the (out, target) pair, which is dead two
@@ -196,7 +230,7 @@ class StencilKernel:
             # in-place updates instead of per-launch copies.
             cur = dict(fields)
             for s in range(nsteps):
-                outs = self._run_jnp(cur, scalars)
+                outs = self._run_jnp(cur, scalars, base)
                 if s < nsteps - 1:
                     for o, tgt in self.rotations.items():
                         cur[o], cur[tgt] = cur[tgt], outs[o]

@@ -34,19 +34,28 @@ from ..core.parallel import StencilKernel
 from . import halo as _halo
 
 
-def _face_slab(arr, axis: int, side: int, thickness: int):
+def _face_slab(arr, axis: int, side: int, thickness: int, off: int = 0):
+    """Face slab covering base positions [0, thickness) / [N-thickness, N).
+    A field staggered by ``off`` along ``axis`` (extent ``N - off``) yields
+    a ``thickness - off`` slab over the same physical region, so slab sets
+    keep the coupled system's staggering intact for the kernel's shape
+    contract."""
+    t = thickness - off
     idx = [slice(None)] * arr.ndim
-    idx[axis] = slice(0, thickness) if side == 0 else slice(-thickness, None)
+    idx[axis] = slice(0, t) if side == 0 else slice(arr.shape[axis] - t, None)
     return arr[tuple(idx)]
 
 
 def _paste_shell(dst, src, axis: int, side: int, radius: int):
-    """Paste the shell ring (layers [r, 2r) from the face) of src into dst."""
+    """Paste the ghost + shell layers ([0, 2r) from the face) of src into
+    dst. Including the ghost ring keeps overlapped_step bit-equal to the
+    sequential reference for `@all`-write outputs too (whose ghost cells
+    are computed from exchanged values, not just carried)."""
     r = radius
     di = [slice(None)] * dst.ndim
     si = [slice(None)] * dst.ndim
-    di[axis] = slice(r, 2 * r) if side == 0 else slice(-2 * r, -r)
-    si[axis] = slice(r, 2 * r) if side == 0 else slice(-2 * r, -r)
+    di[axis] = slice(0, 2 * r) if side == 0 else slice(-2 * r, None)
+    si[axis] = slice(0, 2 * r) if side == 0 else slice(-2 * r, None)
     return dst.at[tuple(di)].set(src[tuple(si)])
 
 
@@ -99,26 +108,51 @@ def overlapped_step(
 ):
     """@hide_communication: bulk update overlaps the halo ppermutes.
 
-    Returns (updated_output, fresh_fields). Rank-local (inside shard_map).
-    Single-output kernels only (extend by returning dicts if needed).
+    Returns (updated_outputs, fresh_fields). Rank-local (inside
+    shard_map). Coupled multi-output kernels update all their outputs in
+    the same overlapped pass (the halo group travels in one round-trip);
+    the return mirrors the kernel's call convention — a bare array for
+    single-output kernels, an out-name dict for coupled systems.
     """
     r = kernel.radius
-    (out_name,) = kernel.outputs
-    nd = fields[out_name].ndim
+    nd = fields[kernel.outputs[0]].ndim
+    single = len(kernel.outputs) == 1
+    # Per-axis base extent of the coupled set: staggered fields (shorter by
+    # their offset) get matching shorter face slabs so the slab set keeps
+    # the system's staggering. Outputs staggered along a decomposed axis
+    # would need offset-aware shell pastes across the shared rank face —
+    # exchange the cell fields and recompute fluxes locally instead.
+    base = tuple(max(v.shape[a] for v in fields.values()) for a in range(nd))
+    for axis in range(min(len(mesh_axes), nd)):
+        for o in kernel.outputs:
+            if fields[o].shape[axis] != base[axis]:
+                raise NotImplementedError(
+                    f"output {o!r} is staggered along decomposed axis "
+                    f"{axis}; overlapped_step supports staggered inputs "
+                    "only — keep face fields rank-local (recompute from "
+                    "exchanged cell fields)"
+                )
 
-    # 1) launch halo exchange (independent subgraph)
+    def as_dict(res):
+        return {kernel.outputs[0]: res} if single else dict(res)
+
+    # 1) launch grouped halo exchange (independent subgraph, one
+    #    round-trip for the whole coupled field set)
     fresh = _halo.exchange_many(fields, exchange, mesh_axes, radius=r, periodic=periodic)
 
     # 2) bulk update with stale halos — correct except the shell ring
-    bulk = kernel(**fields, **scalars)
+    bulk = as_dict(kernel(**fields, **scalars))
 
     # 3) recompute the shell per face from fresh slabs and paste
     thickness = 3 * r
     for axis in range(min(len(mesh_axes), nd)):
         for side in (0, 1):
             slab_fields = {
-                n: _face_slab(v, axis, side, thickness) for n, v in fresh.items()
+                n: _face_slab(v, axis, side, thickness,
+                              off=base[axis] - v.shape[axis])
+                for n, v in fresh.items()
             }
-            slab_out = kernel(**slab_fields, **scalars)
-            bulk = _paste_shell(bulk, slab_out, axis, side, r)
-    return bulk, fresh
+            slab_out = as_dict(kernel(**slab_fields, **scalars))
+            for o in kernel.outputs:
+                bulk[o] = _paste_shell(bulk[o], slab_out[o], axis, side, r)
+    return (bulk[kernel.outputs[0]] if single else bulk), fresh

@@ -19,7 +19,6 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import math
 import os
 from typing import Callable, Sequence
 
@@ -54,6 +53,9 @@ def _divisors(n: int) -> list[int]:
     return [d for d in range(1, n + 1) if n % d == 0]
 
 
+_window_bytes = _stencil.window_footprint_bytes
+
+
 def tile_candidates(
     shape: Sequence[int],
     radius: int,
@@ -61,18 +63,24 @@ def tile_candidates(
     itemsize: int,
     vmem_budget: int = _stencil.DEFAULT_VMEM_BUDGET,
     max_candidates: int = 4,
+    field_offsets: Sequence[Sequence[int]] | None = None,
 ) -> list[tuple[int, ...]]:
     """Derived block plus divisor-preserving halvings/doublings of the
-    leading (non-minor) axes, all within the VMEM budget."""
+    leading (non-minor) axes, all within the VMEM budget. The budget is
+    checked against the *full coupled field set's* window footprint
+    (``field_offsets``: one staggering tuple per field; defaults to
+    ``n_fields`` collocated fields)."""
     shape = tuple(int(s) for s in shape)
     nd = len(shape)
+    if field_offsets is None:
+        field_offsets = [(0,) * nd] * n_fields
     _, base = _stencil.derive_launch(shape, radius, n_fields, itemsize,
-                                     vmem_budget)
+                                     vmem_budget,
+                                     field_offsets=field_offsets)
     halo = radius
 
     def fits(blk):
-        return (n_fields * math.prod(b + 2 * halo for b in blk) * itemsize
-                <= vmem_budget)
+        return _window_bytes(blk, halo, field_offsets, itemsize) <= vmem_budget
 
     cands = [base]
     for axis in range(max(nd - 1, 1)):
@@ -88,15 +96,21 @@ def tile_candidates(
 
 def cache_key(shape, dtype, radius: int, n_fields: int, tag: str = "",
               nsteps_candidates: Sequence[int] = (),
-              tiles=None, vmem_budget: int = 0) -> tuple:
+              tiles=None, vmem_budget: int = 0,
+              field_offsets: Sequence[Sequence[int]] | None = None) -> tuple:
     """Memo key covers the full search space: a call with a different
-    candidate set must re-tune, not inherit another sweep's winner."""
+    candidate set must re-tune, not inherit another sweep's winner. The
+    coupled field set's staggering (``field_offsets``) is part of the key:
+    two systems with the same field count but different VMEM footprints
+    tune independently."""
     return (tag, tuple(int(s) for s in shape), jnp.dtype(dtype).name,
             int(radius), int(n_fields),
             tuple(int(k) for k in nsteps_candidates),
             None if tiles is None else tuple(tuple(int(b) for b in t)
                                              for t in tiles),
-            int(vmem_budget))
+            int(vmem_budget),
+            None if field_offsets is None else tuple(
+                tuple(int(o) for o in off) for off in field_offsets))
 
 
 def autotune(
@@ -113,17 +127,22 @@ def autotune(
     iters: int = 5,
     tag: str = "",
     cache_path: str | None = None,
+    field_offsets: Sequence[Sequence[int]] | None = None,
 ) -> TuneResult:
     """Find the fastest (tile, nsteps) for a stencil problem class.
 
     ``make_step(tile, nsteps)`` must return a zero-arg callable advancing
     ``nsteps`` time steps with that configuration (typically a jit'd
     ``StencilKernel.run_steps`` closure). Per-step median wall time decides.
-    Results are memoized per (shape, dtype, radius, n_fields, tag) in
+    Results are memoized per (shape, dtype, radius, field set, tag) in
     process memory and, when ``cache_path`` is given, in a JSON file.
+
+    For coupled systems pass ``field_offsets`` (one per-axis staggering
+    tuple per field): the candidate filter and derived tiles then budget
+    VMEM for the *sum* of all the system's windows, not a single field.
     """
     key = cache_key(shape, dtype, radius, n_fields, tag, nsteps_candidates,
-                    tiles, vmem_budget)
+                    tiles, vmem_budget, field_offsets)
     if key in _CACHE:
         return _CACHE[key]
     if cache_path and os.path.exists(cache_path):
@@ -134,9 +153,13 @@ def autotune(
             return hit
 
     itemsize = jnp.dtype(dtype).itemsize if itemsize is None else itemsize
+    nd = len(tuple(shape))
+    offs = (field_offsets if field_offsets is not None
+            else [(0,) * nd] * n_fields)
     derived_tiles = tiles is None
     if derived_tiles:
-        tiles = tile_candidates(shape, radius, n_fields, itemsize, vmem_budget)
+        tiles = tile_candidates(shape, radius, n_fields, itemsize, vmem_budget,
+                                field_offsets=field_offsets)
     best: TuneResult | None = None
     tried = 0
     for tile in tiles:
@@ -145,12 +168,12 @@ def autotune(
             k = int(k)
             if derived_tiles:
                 # Temporal blocking widens the halo to k*radius; enforce the
-                # VMEM budget at the depth actually being measured.
+                # VMEM budget at the depth actually being measured, summed
+                # over the full coupled field set.
                 # (Explicitly-passed tiles bypass this: the caller may be
                 # tuning a backend where the budget is irrelevant, e.g. jnp.)
-                window = (n_fields * math.prod(b + 2 * radius * k
-                                               for b in tile) * itemsize)
-                if window > vmem_budget:
+                if _window_bytes(tile, radius * k, offs,
+                                 itemsize) > vmem_budget:
                     continue
             try:
                 fn = make_step(tile, k)

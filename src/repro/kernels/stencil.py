@@ -25,6 +25,36 @@ memory/registers and sweeps it. The TPU-native equivalent built here:
     then crosses HBM once per *k* steps instead of once per step, cutting
     A_eff by ~k at the cost of redundant halo-cone recompute per block.
 
+Coupled multi-field systems
+---------------------------
+One launch may carry several simultaneous output fields (``out_names``)
+and **mixed-shape staggered fields**: a field whose extent along axis ``a``
+is ``shape[a] - off`` with ``0 <= off <= radius`` lives on cell faces
+(``off = 1`` is the classic face-centered flux next to cell-centered
+scalars). Per-field halo windows are derived from the field's staggering:
+a field with offset ``off`` gets a VMEM window of ``block + 2*halo - off``
+per axis, which is exactly what makes the *relative slice* fd operators
+(``d_xa``, ``av_xa``, ``inn``, ...) consume shapes on windows the same way
+they do on full arrays — the single-source shape contract.
+
+Per-output write semantics are likewise *derived from the update's shape*
+along each axis (the engine's analogue of ParallelStencil's ``@inn(T2)``
+vs ``@all(qx)`` left-hand sides):
+
+  * update extent == window extent - 2*radius  ->  ``inn``: interior
+    write; the output's boundary ring keeps its previous values.
+  * update extent == window extent             ->  ``all``: every
+    in-domain cell is written (no boundary ring). Staggered axes
+    (``off > 0``) *must* use ``all`` semantics: an interior-style
+    staggered write would leave the faces straddling block boundaries
+    covered by no block.
+
+Multi-output temporal blocking: with ``nsteps=k`` each sweep's outputs
+rotate into their ``rotations[out]`` partner windows (the in-kernel
+analogue of ``phi, phi2 = phi2, phi; Pe, Pe2 = Pe2, Pe``), so whole
+coupled systems (porosity waves, Gross-Pitaevskii) advance k steps per
+HBM round-trip.
+
 Caveats (documented): the update function must not read an *output* field's
 halo ring (its window is only used as the boundary-copy source). All paper
 solvers satisfy this — e.g. Fig. 1's ``T2`` is write-only. With ``nsteps>1``
@@ -61,6 +91,22 @@ def _pick_block(n: int, cap: int, align: int) -> int:
     return (aligned or divs)[-1]
 
 
+def window_footprint_bytes(
+    block: Sequence[int],
+    halo: int,
+    field_offsets: Sequence[Sequence[int]],
+    itemsize: int,
+) -> int:
+    """VMEM bytes of a coupled field set's halo-extended windows: each
+    field occupies ``prod(block + 2*halo - off)`` elements. The single
+    shared accounting used by launch derivation, the autotuner's candidate
+    filter and ``run.window_bytes`` — keep them consistent."""
+    return sum(
+        math.prod(b + 2 * halo - o for b, o in zip(block, off))
+        for off in field_offsets
+    ) * itemsize
+
+
 def derive_launch(
     shape: Sequence[int],
     radius: int,
@@ -69,6 +115,7 @@ def derive_launch(
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
     tile: Sequence[int] | None = None,
     nsteps: int = 1,
+    field_offsets: Sequence[Sequence[int]] | None = None,
 ) -> tuple[tuple[int, ...], tuple[int, ...]]:
     """Derive (grid, block_shape) from array bounds — ParallelStencil's
     automatic launch-parameter derivation, with TPU tiling constraints.
@@ -79,10 +126,23 @@ def derive_launch(
     windows of all fields fit the VMEM budget. With temporal blocking
     (``nsteps > 1``) the window halo is ``nsteps * radius`` per side, so
     the same budget yields smaller blocks.
+
+    ``field_offsets`` gives the per-field staggering offsets of the whole
+    coupled field set (one tuple per field, entries subtracted from the
+    base window extent); when present the VMEM footprint is the *sum of
+    the per-field windows*, so a system with many fields gets smaller
+    blocks than a single-field problem under the same budget.
     """
     shape = tuple(int(s) for s in shape)
     nd = len(shape)
     halo = radius * max(int(nsteps), 1)
+    if field_offsets is None:
+        field_offsets = [(0,) * nd] * int(n_fields)
+    field_offsets = [tuple(int(o) for o in off) for off in field_offsets]
+
+    def window_bytes(blk):
+        return window_footprint_bytes(blk, halo, field_offsets, itemsize)
+
     if tile is not None:
         block = tuple(int(b) for b in tile)
         if len(block) != nd or any(s % b for s, b in zip(shape, block)):
@@ -93,9 +153,6 @@ def derive_launch(
         block = [
             _pick_block(s, c, al) for s, c, al in zip(shape, caps, aligns)
         ]
-
-        def window_bytes(blk):
-            return n_fields * math.prod(b + 2 * halo for b in blk) * itemsize
 
         # Shrink the largest non-minor axis first; keep lane alignment longest.
         while window_bytes(block) > vmem_budget:
@@ -153,20 +210,104 @@ def compiler_params(nd: int):
     return cp(dimension_semantics=("parallel",) * nd)
 
 
-def _interior_mask(block: tuple[int, ...], shape: tuple[int, ...], radius: int,
-                   extent: int = 0):
-    """Boolean mask marking globally-interior cells over this block extended
-    by ``extent`` cells per side (extent=0: the block itself; temporal
-    sweeps mask progressively shrinking super-blocks)."""
+def field_geometry(
+    shape: Sequence[int],
+    field_names: Sequence[str],
+    field_shapes: Mapping[str, Sequence[int]] | None,
+    radius: int,
+) -> tuple[dict[str, tuple[int, ...]], dict[str, tuple[int, ...]]]:
+    """Resolve per-field shapes and staggering offsets against the base
+    (cell-centered) ``shape``; offsets must lie in ``[0, radius]``."""
+    base = tuple(int(s) for s in shape)
+    field_shapes = dict(field_shapes or {})
+    shapes, offsets = {}, {}
+    for n in field_names:
+        s = tuple(int(x) for x in field_shapes.get(n, base))
+        if len(s) != len(base):
+            raise ValueError(
+                f"field {n!r} shape {s} has rank {len(s)}, expected {len(base)}"
+            )
+        off = tuple(b - x for b, x in zip(base, s))
+        if any(o < 0 or o > radius for o in off):
+            raise ValueError(
+                f"field {n!r} shape {s} is not within the staggering band of "
+                f"base shape {base}: per-axis offsets {off} must lie in "
+                f"[0, radius={radius}] (face-centered fields are at most "
+                "`radius` shorter than the cell-centered base per axis)"
+            )
+        shapes[n] = s
+        offsets[n] = off
+    return shapes, offsets
+
+
+def _write_modes(
+    update_shape: Sequence[int],
+    window_shape: Sequence[int],
+    radius: int,
+    off: Sequence[int],
+    name: str,
+) -> tuple[str, ...]:
+    """Per-axis write semantics derived from the update's traced shape.
+
+    ``all``: the update spans the field's whole window (ParallelStencil's
+    ``@all(qx) = ...`` left-hand side — every in-domain cell is written).
+    ``inn``: it spans the window interior (``@inn(T2) = ...`` — the
+    boundary ring keeps its previous values). Staggered axes must be
+    ``all``: an interior-style write on a face-centered axis would leave
+    the faces straddling block boundaries written by no block.
+    """
+    modes = []
+    for a, (u, w, o) in enumerate(zip(update_shape, window_shape, off)):
+        if u == w:
+            modes.append("all")
+        elif u == w - 2 * radius:
+            if o > 0:
+                raise ValueError(
+                    f"output {name!r} is staggered along axis {a} (offset "
+                    f"{o}) but its update covers only the interior there; "
+                    "staggered axes must be written at full extent "
+                    "(`all` semantics, e.g. qx = -k_face * d_xa(Pe)/dx)"
+                )
+            modes.append("inn")
+        else:
+            raise ValueError(
+                f"output {name!r} update has extent {u} along axis {a}; "
+                f"expected {w} (`all` write) or {w - 2 * radius} "
+                f"(`inn` write) for window extent {w} at radius {radius}"
+            )
+    return tuple(modes)
+
+
+def _valid_mask(block, field_shape, off, radius, modes, extent):
+    """Mask of the cells this block may write for one output field, on the
+    frame ``[pid*block - extent, pid*block + block + extent - off)`` per
+    axis (``extent=0`` with ``off=0`` is the plain out-block frame;
+    temporal sweeps blend on progressively shrinking super-blocks).
+
+    ``inn`` axes accept the field's global interior; ``all`` axes accept
+    every in-domain cell (OOB cells beyond a staggered field's extent stay
+    masked and are cropped by the caller).
+    """
     nd = len(block)
-    mshape = tuple(b + 2 * extent for b in block)
+    mshape = tuple(b + 2 * extent - o for b, o in zip(block, off))
     m = None
     for a in range(nd):
         pid = pl.program_id(a)
         g = pid * block[a] - extent + jax.lax.broadcasted_iota(jnp.int32, mshape, a)
-        ma = (g >= radius) & (g < shape[a] - radius)
+        if modes[a] == "inn":
+            ma = (g >= radius) & (g < field_shape[a] - radius)
+        else:
+            ma = (g >= 0) & (g < field_shape[a])
         m = ma if m is None else (m & ma)
     return m
+
+
+def _interior_mask(block, shape, radius: int, extent: int = 0):
+    """Collocated interior mask (the pre-coupled-engine special case of
+    :func:`_valid_mask`; kept for the hand-specialized kernels)."""
+    nd = len(block)
+    return _valid_mask(block, tuple(shape), (0,) * nd, radius,
+                       ("inn",) * nd, extent)
 
 
 def build_stencil_call(
@@ -183,18 +324,25 @@ def build_stencil_call(
     interpret: bool | None = None,
     nsteps: int = 1,
     rotations: Mapping[str, str] | None = None,
+    field_shapes: Mapping[str, Sequence[int]] | None = None,
 ) -> Callable[..., dict[str, jax.Array]]:
     """Build a fused Pallas stencil step (or a k-step temporal block).
 
-    ``update_fn(fields, scalars) -> {out_name: interior_update}`` is traced
-    on halo-extended VMEM windows. Returns ``run(fields, scalars)`` mapping
+    ``update_fn(fields, scalars) -> {out_name: update}`` is traced on
+    halo-extended VMEM windows. Returns ``run(fields, scalars)`` mapping
     full arrays -> dict of full output arrays.
+
+    ``shape`` is the *base* (cell-centered) extent; ``field_shapes`` may
+    give smaller per-field extents for staggered fields (``shape - off``
+    per axis, ``0 <= off <= radius``) — each field's window and write mask
+    are derived from its own geometry (see module docstring).
 
     With ``nsteps=k > 1`` the update is swept k times inside the kernel:
     the windows carry a ``k*radius`` halo, each sweep shrinks them by
     ``radius`` per side, and ``rotations[out_name]`` names the input field
     the sweep's output becomes for the next sweep (the in-kernel analogue
-    of the solver's ``T, T2 = T2, T`` double-buffer rotation).
+    of the solver's ``T, T2 = T2, T`` double-buffer rotation) — for
+    coupled systems every output rotates simultaneously.
     """
     shape = tuple(int(s) for s in shape)
     nd = len(shape)
@@ -210,6 +358,7 @@ def build_stencil_call(
             raise ValueError(
                 f"output {o!r} must also be an input field (boundary-copy source)"
             )
+    shapes, offsets = field_geometry(shape, field_names, field_shapes, radius)
     if nsteps > 1:
         rotations = dict(rotations or {})
         missing = set(out_names) - set(rotations)
@@ -226,12 +375,19 @@ def build_stencil_call(
                     f"rotation target {tgt!r} is an output; outputs only "
                     "provide boundary values and cannot receive sweep results"
                 )
+            if o in shapes and shapes[o] != shapes[tgt]:
+                raise ValueError(
+                    f"rotation {o!r} -> {tgt!r} joins fields of different "
+                    f"shapes {shapes[o]} vs {shapes[tgt]}; double-buffer "
+                    "partners must share one staggering"
+                )
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
     grid, block = derive_launch(
         shape, radius, len(field_names), dtype.itemsize, vmem_budget, tile,
         nsteps=nsteps,
+        field_offsets=[offsets[n] for n in field_names],
     )
     r = radius
     halo = r * nsteps
@@ -243,10 +399,14 @@ def build_stencil_call(
         return pids
 
     n_s, n_f = len(scalar_names), len(field_names)
-    center = tuple(slice(r, r + b) for b in block)
 
     def _crop(a, w: int):
         return a[tuple(slice(w, d - w) for d in a.shape)]
+
+    def _check_updates(updates):
+        missing = set(out_names) - set(updates)
+        if missing:
+            raise ValueError(f"update_fn did not produce outputs {missing}")
 
     def body(*refs):
         scal_refs = refs[:n_s]
@@ -254,30 +414,57 @@ def build_stencil_call(
         out_refs = refs[n_s + n_f :]
         scalars = {n: ref[0] for n, ref in zip(scalar_names, scal_refs)}
         windows = {n: ref[...] for n, ref in zip(field_names, in_refs)}
+        halo_now = halo
         for s in range(nsteps - 1):
             updates = update_fn(windows, scalars)
-            ext = (nsteps - 1 - s) * r  # remaining halo extent after this sweep
-            mask = _interior_mask(block, shape, r, ext)
+            _check_updates(updates)
+            win_shapes = {n: w.shape for n, w in windows.items()}
+            ext = halo_now - r  # remaining halo extent after this sweep
             windows = {n: _crop(w, r) for n, w in windows.items()}
             for o in out_names:
                 tgt = rotations[o]
-                # Boundary cells keep carrying their original values (the
-                # boundary condition is constant across sweeps).
-                windows[tgt] = jnp.where(mask, updates[o].astype(dtype),
-                                         windows[tgt])
+                modes = _write_modes(updates[o].shape, win_shapes[o], r,
+                                     offsets[o], o)
+                upd = updates[o].astype(dtype)
+                # `all`-mode extents span the pre-crop window; bring them
+                # onto the cropped frame. `inn` extents already match it.
+                upd = upd[tuple(
+                    slice(r, d - r) if m == "all" else slice(None)
+                    for m, d in zip(modes, upd.shape)
+                )]
+                mask = _valid_mask(block, shapes[o], offsets[o], r, modes, ext)
+                # Cells outside the mask (boundary ring of `inn` axes) keep
+                # carrying their original values: the boundary condition is
+                # constant across sweeps.
+                windows[tgt] = jnp.where(mask, upd, windows[tgt])
+            halo_now = ext
         updates = update_fn(windows, scalars)
-        missing = set(out_names) - set(updates)
-        if missing:
-            raise ValueError(f"update_fn did not produce outputs {missing}")
-        mask = _interior_mask(block, shape, r)
-        for name, oref in zip(out_names, out_refs):
-            prev = windows[name][center]
-            oref[...] = jnp.where(mask, updates[name].astype(dtype), prev)
+        _check_updates(updates)
+        for o, oref in zip(out_names, out_refs):
+            modes = _write_modes(updates[o].shape, windows[o].shape, r,
+                                 offsets[o], o)
+            # Lift update and previous values onto the out-block frame
+            # [pid*block, pid*block + block): `all` extents start at -r,
+            # `inn` extents (off = 0) start at 0 and already span block.
+            upd = updates[o].astype(dtype)[tuple(
+                slice(r, r + b) if m == "all" else slice(0, b)
+                for m, b in zip(modes, block)
+            )]
+            prev = windows[o][tuple(slice(r, r + b) for b in block)]
+            mask = _valid_mask(block, shapes[o], (0,) * nd, r, modes, 0)
+            oref[...] = jnp.where(mask, upd, prev)
 
     in_specs = [pl.BlockSpec(memory_space=pltpu.SMEM) for _ in scalar_names]
     in_specs += [
-        halo_window_spec(block, (halo,) * nd, in_index_map) for _ in field_names
+        halo_window_spec(
+            tuple(b - o for b, o in zip(block, offsets[n])),
+            (halo,) * nd,
+            in_index_map,
+        )
+        for n in field_names
     ]
+    # Outputs are stored at the base extent (blocks tile it exactly) and
+    # cropped back to their staggered extents on the way out.
     out_specs = [pl.BlockSpec(block, out_index_map) for _ in out_names]
     out_shape = [jax.ShapeDtypeStruct(shape, dtype) for _ in out_names]
 
@@ -302,17 +489,23 @@ def build_stencil_call(
         ]
         ordered_fields = [jnp.asarray(fields[n], dtype=dtype) for n in field_names]
         for n, f in zip(field_names, ordered_fields):
-            if f.shape != shape:
-                raise ValueError(f"field {n!r} has shape {f.shape}, expected {shape}")
+            if f.shape != shapes[n]:
+                raise ValueError(
+                    f"field {n!r} has shape {f.shape}, expected {shapes[n]}"
+                )
         outs = call(*ordered_scal, *ordered_fields)
         if len(out_names) == 1:
             outs = [outs]
+        outs = [
+            o[tuple(slice(0, s) for s in shapes[n])] if shapes[n] != shape else o
+            for n, o in zip(out_names, outs)
+        ]
         return dict(zip(out_names, outs))
 
     run.grid = grid
     run.block = block
     run.nsteps = nsteps
-    run.window_bytes = len(field_names) * math.prod(
-        b + 2 * halo for b in block
-    ) * dtype.itemsize
+    run.field_shapes = dict(shapes)
+    run.window_bytes = window_footprint_bytes(
+        block, halo, [offsets[n] for n in field_names], dtype.itemsize)
     return run

@@ -7,6 +7,10 @@ import sys
 os.environ.setdefault("XLA_FLAGS", "")
 os.environ["JAX_PLATFORMS"] = "cpu"
 
+# Make the example solvers importable as `examples.<name>` (they are
+# library modules with a thin CLI; tests drive their step()/solve() APIs).
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
 import numpy as np
 import pytest
 
