@@ -1,0 +1,45 @@
+"""Provenance stamp for BENCH_*.json records.
+
+Every benchmark record carries the jax/jaxlib versions, the backend
+platform it actually ran on, and the repo's git revision, so the perf
+trajectory stays attributable across machines and commits.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import time
+
+
+def git_sha(short: bool = True) -> str | None:
+    """Current revision of the repo containing this file (None outside a
+    checkout or without git on PATH)."""
+    cmd = ["git", "rev-parse"] + (["--short"] if short else []) + ["HEAD"]
+    try:
+        out = subprocess.run(
+            cmd, capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        )
+        sha = out.stdout.strip()
+        return sha or None
+    except Exception:
+        return None
+
+
+def bench_meta() -> dict:
+    """The provenance record stamped into every BENCH_*.json."""
+    import jax
+
+    try:
+        import jaxlib
+        jaxlib_version = getattr(jaxlib, "__version__", None)
+    except Exception:
+        jaxlib_version = None
+    return {
+        "jax_version": jax.__version__,
+        "jaxlib_version": jaxlib_version,
+        "backend": jax.default_backend(),
+        "device": str(jax.devices()[0]) if jax.devices() else None,
+        "git_sha": git_sha(),
+        "timestamp_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+    }

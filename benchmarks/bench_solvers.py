@@ -90,25 +90,28 @@ def bench_gp_translation(n: int = 48, iters: int = 10):
 
     ps = init_parallel_stencil(backend="jnp", ndims=3)
 
-    def H(f, re, im, _dx2, _dy2, _dz2):
+    # V enters as a field argument: the stencil IR traces the kernel, so
+    # every array it reads must be visible as an argument (closures over
+    # full arrays are untraceable by design).
+    def H(f, re, im, V, _dx2, _dy2, _dz2):
         lap = fd.d2_xi(f) * _dx2 + fd.d2_yi(f) * _dy2 + fd.d2_zi(f) * _dz2
         dens = fd.inn(re) ** 2 + fd.inn(im) ** 2
         return -0.5 * lap + (fd.inn(V) + 0.5 * dens) * fd.inn(f)
 
     @ps.parallel(outputs=("re2",))
-    def step_re(re2, re, im, dt, _dx2, _dy2, _dz2):
-        return {"re2": fd.inn(re) + dt * H(im, re, im, _dx2, _dy2, _dz2)}
+    def step_re(re2, re, im, V, dt, _dx2, _dy2, _dz2):
+        return {"re2": fd.inn(re) + dt * H(im, re, im, V, _dx2, _dy2, _dz2)}
 
     @ps.parallel(outputs=("im2",))
-    def step_im(im2, re, im, dt, _dx2, _dy2, _dz2):
-        return {"im2": fd.inn(im) - dt * H(re, re, im, _dx2, _dy2, _dz2)}
+    def step_im(im2, re, im, V, dt, _dx2, _dy2, _dz2):
+        return {"im2": fd.inn(im) - dt * H(re, re, im, V, _dx2, _dy2, _dz2)}
 
     @jax.jit
     def framework(re, im):
-        re = step_re(re2=re, re=re, im=im, dt=dt, _dx2=inv2[0], _dy2=inv2[1],
-                     _dz2=inv2[2])
-        im = step_im(im2=im, re=re, im=im, dt=dt, _dx2=inv2[0], _dy2=inv2[1],
-                     _dz2=inv2[2])
+        re = step_re(re2=re, re=re, im=im, V=V, dt=dt, _dx2=inv2[0],
+                     _dy2=inv2[1], _dz2=inv2[2])
+        im = step_im(im2=im, re=re, im=im, V=V, dt=dt, _dx2=inv2[0],
+                     _dy2=inv2[1], _dz2=inv2[2])
         return re, im
 
     mh = teff.measure(lambda: hand(re, im), iters=iters)
@@ -276,11 +279,16 @@ def main(argv=None):
     record["gp_coupled"] = gc
 
     path = args.json or f"BENCH_solvers_p{p['n']}_g{gc['n']}.json"
+    try:
+        from ._meta import bench_meta
+    except ImportError:
+        from _meta import bench_meta
     with open(path, "w") as f:
         json.dump({"rows": record,
                    "backend": jax.default_backend(),
                    "note": ("pallas interpret-mode on non-TPU hosts; "
-                            "ratios are correctness-path records there")},
+                            "ratios are correctness-path records there"),
+                   "meta": bench_meta()},
                   f, indent=1)
     print(f"# wrote {path}")
     return record

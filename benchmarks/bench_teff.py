@@ -42,6 +42,32 @@ import numpy as np
 from repro.configs.diffusion3d import BENCH_128, BENCH_256, Diffusion3DConfig
 from repro.core import Grid, fd3d as fd, init_parallel_stencil, teff
 from repro.kernels import ops, ref
+from repro.launch import roofline as _roofline
+
+try:
+    from ._meta import bench_meta   # imported as benchmarks.bench_teff
+except ImportError:
+    from _meta import bench_meta    # run as a script
+
+
+def _diffusion_kernel(ps):
+    @ps.parallel(outputs=("T2",), rotations={"T2": "T"})
+    def kern(T2, T, Ci, lam, dt, _dx, _dy, _dz):
+        return {"T2": fd.inn(T) + dt * (lam * fd.inn(Ci) * (
+            fd.d2_xi(T) * _dx ** 2 + fd.d2_yi(T) * _dy ** 2 +
+            fd.d2_zi(T) * _dz ** 2))}
+    return kern
+
+
+def _analytic(shape):
+    """IR-derived accounting for the Fig. 1 solver: exact A_eff (replaces
+    the hand-counted n_read=2/n_write=1) and the analytic cost model for
+    roofline records."""
+    kern = _diffusion_kernel(init_parallel_stencil(backend="jnp", ndims=3))
+    sc = dict(lam=1.0, dt=1.0, _dx=1.0, _dy=1.0, _dz=1.0)
+    ir = kern.stencil_ir(T2=shape, T=shape, Ci=shape, **sc)
+    cost = kern.cost_model(T2=shape, T=shape, Ci=shape, **sc)
+    return ir, cost
 
 
 def _setup(cfg: Diffusion3DConfig):
@@ -58,7 +84,10 @@ def bench(cfg: Diffusion3DConfig = BENCH_128, iters: int = 20,
           host_bw: float | None = None):
     g, T, T2, Ci, dt = _setup(cfg)
     inv = g.inv_spacing
-    a_eff = teff.a_eff(g.n_points, n_read=2, n_write=1, itemsize=4)
+    # A_eff from the traced stencil IR (reads {T, Ci}, writes {T2}) —
+    # identical to the paper's hand count of 3 fields, but derived.
+    ir, _ = _analytic(cfg.shape)
+    a_eff = teff.a_eff_from_ir(ir, itemsize=4)
     if host_bw is None:
         host_bw = teff.measure_host_bandwidth()
     rows = []
@@ -117,18 +146,13 @@ def bench_temporal(cfg: Diffusion3DConfig, nsteps: int, iters: int = 20,
     """k sequential single-step launches vs the fused k-step path."""
     g, T, T2, Ci, dt = _setup(cfg)
     inv = g.inv_spacing
-    a_eff = teff.a_eff(g.n_points, n_read=2, n_write=1, itemsize=4)
+    ir, _ = _analytic(cfg.shape)
+    a_eff = teff.a_eff_from_ir(ir, itemsize=4)
     if host_bw is None:
         host_bw = teff.measure_host_bandwidth()
     sc = dict(lam=cfg.lam, dt=dt, _dx=inv[0], _dy=inv[1], _dz=inv[2])
 
-    ps = init_parallel_stencil(backend="jnp", ndims=3)
-
-    @ps.parallel(outputs=("T2",), rotations={"T2": "T"})
-    def kern(T2, T, Ci, lam, dt, _dx, _dy, _dz):
-        return {"T2": fd.inn(T) + dt * (lam * fd.inn(Ci) * (
-            fd.d2_xi(T) * _dx ** 2 + fd.d2_yi(T) * _dy ** 2 +
-            fd.d2_zi(T) * _dz ** 2))}
+    kern = _diffusion_kernel(init_parallel_stencil(backend="jnp", ndims=3))
 
     # k sequential launches, rotating the double buffer between launches
     step1 = jax.jit(lambda a, b: kern(T2=a, T=b, Ci=Ci, **sc))
@@ -182,10 +206,19 @@ def main(out_rows=None, nsteps: int = 1, iters: int = 20, sizes=None,
     for n, sp in temporal_speedups.items():
         print(f"teff_speedup_fused{nsteps}_vs_seq_{n},{sp:.2f},x")
     if json_path:
+        # per-size roofline positions from the analytic cost model (the
+        # IR-traced flop/byte counts against the v5e roofline constants)
+        rooflines = {}
+        for cfg in cfgs:
+            _, cost = _analytic(cfg.shape)
+            rooflines[str(cfg.nx)] = _roofline.stencil_roofline(
+                cost, nsteps=max(nsteps, 1))
         with open(json_path, "w") as f:
             json.dump({"rows": all_rows, "nsteps": nsteps,
                        "fused_vs_seq_speedup":
-                           {str(n): sp for n, sp in temporal_speedups.items()}},
+                           {str(n): sp for n, sp in temporal_speedups.items()},
+                       "roofline_v5e": rooflines,
+                       "meta": bench_meta()},
                       f, indent=1)
         print(f"# wrote {json_path}")
     if out_rows is not None:

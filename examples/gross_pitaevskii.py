@@ -16,8 +16,14 @@ Two formulations through the same ``@parallel`` engine:
     blocking (k coupled steps per launch).
   * ``fused=False``: the seed's two radius-1 launches (re then im).
 
+The fused coupled kernel declares no ``radius``: the engine's stencil IR
+infers the radius-2 footprint from the two-frame symplectic update
+itself. ``--bc`` declares per-output boundary conditions fused into the
+engine step (default: the seed's frozen boundary ring).
+
     PYTHONPATH=src python examples/gross_pitaevskii.py [--n 48] [--nt 200]
         [--backend jnp|pallas] [--two-launch]
+        [--bc none|neumann|dirichlet|periodic]
 """
 from __future__ import annotations
 
@@ -28,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import Grid, fd3d as fd, init_parallel_stencil
+from repro.ir import BoundaryCondition
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,7 +44,22 @@ class GPConfig:
     g: float = 0.5             # interaction strength
     backend: str = "jnp"
     fused: bool = True
+    bc: str = "none"           # none | neumann | dirichlet | periodic
     interpret: bool | None = None
+
+
+def boundary_conditions(cfg: GPConfig) -> dict | None:
+    """Per-output BC specs for (re2, im2). ``none`` keeps the seed's
+    behavior: the boundary ring of the trap stays frozen at its initial
+    (exponentially small) values."""
+    if cfg.bc == "none":
+        return None
+    kinds = {"neumann": lambda: BoundaryCondition("neumann0"),
+             "dirichlet": lambda: BoundaryCondition("dirichlet", value=0.0),
+             "periodic": lambda: BoundaryCondition("periodic")}
+    if cfg.bc not in kinds:
+        raise ValueError(f"unknown bc {cfg.bc!r}")
+    return {"re2": kinds[cfg.bc](), "im2": kinds[cfg.bc]()}
 
 
 def make_grid(cfg: GPConfig) -> Grid:
@@ -69,9 +91,12 @@ def make_step(grid: Grid, cfg: GPConfig):
     underlying StencilKernel(s) (fused variant supports ``run_steps``)."""
     ps = init_parallel_stencil(backend=cfg.backend, ndims=3,
                                interpret=cfg.interpret)
+    bc = boundary_conditions(cfg)
 
     if cfg.fused:
-        @ps.parallel(outputs=("re2", "im2"), radius=2,
+        # radius omitted: the IR infers the coupled two-frame update's
+        # radius-2 footprint from the kernel source.
+        @ps.parallel(outputs=("re2", "im2"), bc=bc,
                      rotations={"re2": "re", "im2": "im"})
         def update(re2, im2, re, im, V, g, dt, _dx2, _dy2, _dz2):
             # frame 1: new re everywhere im's stencil will need it
@@ -89,12 +114,15 @@ def make_step(grid: Grid, cfg: GPConfig):
                          _dx2=inv2[0], _dy2=inv2[1], _dz2=inv2[2])
             return out["re2"], out["im2"]
     else:
-        @ps.parallel(outputs=("re2",))
+        bc_re = None if bc is None else {"re2": bc["re2"]}
+        bc_im = None if bc is None else {"im2": bc["im2"]}
+
+        @ps.parallel(outputs=("re2",), bc=bc_re)
         def step_re(re2, re, im, V, g, dt, _dx2, _dy2, _dz2):
             return {"re2": fd.inn(re)
                            + dt * _H(im, re, im, V, g, _dx2, _dy2, _dz2)}
 
-        @ps.parallel(outputs=("im2",))
+        @ps.parallel(outputs=("im2",), bc=bc_im)
         def step_im(im2, re, im, V, g, dt, _dx2, _dy2, _dz2):
             return {"im2": fd.inn(im)
                            - dt * _H(re, re, im, V, g, _dx2, _dy2, _dz2)}
@@ -142,9 +170,12 @@ def main(argv=None):
     ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
     ap.add_argument("--two-launch", action="store_true",
                     help="seed scheme: two radius-1 launches per step")
+    ap.add_argument("--bc", default="none",
+                    choices=["none", "neumann", "dirichlet", "periodic"],
+                    help="boundary condition fused into the engine step")
     args = ap.parse_args(argv)
     cfg = GPConfig(n=args.n, nt=args.nt, g=args.g, backend=args.backend,
-                   fused=not args.two_launch)
+                   fused=not args.two_launch, bc=args.bc)
     r = solve(cfg)
     print(f"GP: {cfg.nt} steps on {r['grid'].shape} [{cfg.backend}"
           f"{'/fused' if cfg.fused else '/two-launch'}] "

@@ -19,8 +19,15 @@ operators. Two equivalent formulations are provided:
     the two-launch scheme that exercises the engine's staggered-field
     support end-to-end. Both produce identical physics.
 
+Stencil geometry is *inferred*: no ``radius`` is declared anywhere — the
+engine traces the update once and derives the (phi, Pe) footprint and
+the staggered flux offsets itself. Boundary conditions are declared per
+output (``--bc``) and fused into the engine's step (bitwise-equal to the
+seed's explicit ``neumann0`` post-pass).
+
     PYTHONPATH=src python examples/porosity_waves.py [--n 128] [--nt 500]
         [--backend jnp|pallas] [--flux-split]
+        [--bc neumann|dirichlet|periodic]
 """
 from __future__ import annotations
 
@@ -31,7 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import Grid, fd2d as fd, init_parallel_stencil
-from repro.core.boundary import neumann0
+from repro.ir import BoundaryCondition
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,7 +52,30 @@ class PorosityConfig:
     rho_g: float = 30.0        # buoyancy contrast
     backend: str = "jnp"
     flux_split: bool = False
+    bc: str = "neumann"        # neumann | dirichlet | periodic | none
     interpret: bool | None = None
+
+
+def boundary_conditions(cfg: PorosityConfig) -> dict | None:
+    """Per-output BC specs routed through the engine's fused path.
+
+    ``neumann`` reproduces the seed's zero-flux post-pass; ``dirichlet``
+    pins the faces to the far-field state (phi0, zero overpressure);
+    ``none`` freezes the initial boundary ring (raw ``@inn`` semantics,
+    the reference the parity tests post-process by hand).
+    """
+    if cfg.bc == "none":
+        return None
+    if cfg.bc == "neumann":
+        return {"phi2": BoundaryCondition("neumann0"),
+                "Pe2": BoundaryCondition("neumann0")}
+    if cfg.bc == "dirichlet":
+        return {"phi2": BoundaryCondition("dirichlet", value=cfg.phi0),
+                "Pe2": BoundaryCondition("dirichlet", value=0.0)}
+    if cfg.bc == "periodic":
+        return {"phi2": BoundaryCondition("periodic"),
+                "Pe2": BoundaryCondition("periodic")}
+    raise ValueError(f"unknown bc {cfg.bc!r}")
 
 
 def make_grid(cfg: PorosityConfig) -> Grid:
@@ -78,12 +108,13 @@ def make_step(grid: Grid, cfg: PorosityConfig):
     """
     dx, dy = grid.spacing
     phi0, npow, eta, rho_g = cfg.phi0, cfg.npow, cfg.eta, cfg.rho_g
+    bc = boundary_conditions(cfg)
     ps = init_parallel_stencil(backend=cfg.backend, ndims=2,
                                interpret=cfg.interpret)
 
     if not cfg.flux_split:
         @ps.parallel(outputs=("phi2", "Pe2"),
-                     rotations={"phi2": "phi", "Pe2": "Pe"})
+                     rotations={"phi2": "phi", "Pe2": "Pe"}, bc=bc)
         def update(phi2, Pe2, phi, Pe, dtau):
             k = (phi / phi0) ** npow
             # staggered Darcy fluxes (x-faces / y-faces), in-kernel
@@ -97,7 +128,7 @@ def make_step(grid: Grid, cfg: PorosityConfig):
 
         def step(phi, Pe, dtau):
             out = update(phi2=phi, Pe2=Pe, phi=phi, Pe=Pe, dtau=dtau)
-            return neumann0(out["phi2"]), neumann0(out["Pe2"])
+            return out["phi2"], out["Pe2"]
 
         step.kernels = (update,)
         return step
@@ -112,7 +143,7 @@ def make_step(grid: Grid, cfg: PorosityConfig):
                 "qy": -fd.av_ya(k) * (fd.d_ya(Pe) / dy
                                       - rho_g * (fd.av_ya(phi) - phi0))}
 
-    @ps.parallel(outputs=("phi2", "Pe2"))
+    @ps.parallel(outputs=("phi2", "Pe2"), bc=bc)
     def update(phi2, Pe2, phi, Pe, qx, qy, dtau):
         div_q = fd.d_xa(qx[:, 1:-1]) / dx + fd.d_ya(qy[1:-1, :]) / dy
         Pe_new = fd.inn(Pe) + dtau * (-(div_q + fd.inn(Pe) / eta))
@@ -127,7 +158,7 @@ def make_step(grid: Grid, cfg: PorosityConfig):
         q = fluxes(qx=qx0, qy=qy0, phi=phi, Pe=Pe)
         out = update(phi2=phi, Pe2=Pe, phi=phi, Pe=Pe,
                      qx=q["qx"], qy=q["qy"], dtau=dtau)
-        return neumann0(out["phi2"]), neumann0(out["Pe2"])
+        return out["phi2"], out["Pe2"]
 
     step.kernels = (fluxes, update)
     return step
@@ -167,12 +198,17 @@ def main(argv=None):
     ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
     ap.add_argument("--flux-split", action="store_true",
                     help="explicit staggered flux fields (two launches)")
+    ap.add_argument("--bc", default="neumann",
+                    choices=["neumann", "dirichlet", "periodic"],
+                    help="boundary condition fused into the engine step")
     args = ap.parse_args(argv)
     cfg = PorosityConfig(n=args.n, nt=args.nt, npow=args.npow,
-                         backend=args.backend, flux_split=args.flux_split)
+                         backend=args.backend, flux_split=args.flux_split,
+                         bc=args.bc)
     r = solve(cfg)
     print(f"porosity wave: {cfg.nt} steps on {r['grid'].shape} "
-          f"[{cfg.backend}{'/flux-split' if cfg.flux_split else ''}]; "
+          f"[{cfg.backend}{'/flux-split' if cfg.flux_split else ''}"
+          f"/bc={cfg.bc}]; "
           f"phi in [{r['phi_min']:.4f}, {r['phi_max']:.4f}]; "
           f"anomaly y: {r['peak0_y']:.2f} -> {r['peak_y']:.2f} (ascending)")
 

@@ -11,6 +11,30 @@ from typing import Sequence
 import jax.numpy as jnp
 
 
+def check_depth(shape: Sequence[int], kind: str, axes: Sequence[int],
+                depth: int) -> None:
+    """Validate that every requested face fits the array.
+
+    ``dirichlet`` needs two disjoint ``depth``-cell faces per axis
+    (extent >= 2*depth); ``neumann0``/``periodic`` additionally need their
+    source layers to be interior cells disjoint from both faces
+    (extent >= 3*depth). Raises a pointed ``ValueError`` otherwise —
+    silently aliasing faces and sources is never what the user meant.
+    """
+    if depth < 1:
+        raise ValueError(f"boundary depth must be >= 1, got {depth}")
+    need = 2 * depth if kind == "dirichlet" else 3 * depth
+    for ax in axes:
+        n = shape[ax]
+        if n < need:
+            raise ValueError(
+                f"axis {ax} of extent {n} is smaller than the {depth}-deep "
+                f"{kind} faces require (need >= {need}: two {depth}-cell "
+                "faces" + ("" if kind == "dirichlet"
+                           else f" plus interior source layers") + ")"
+            )
+
+
 def _face(ndim: int, axis: int, side: int, depth: int = 1):
     sl = [slice(None)] * ndim
     sl[axis] = slice(0, depth) if side == 0 else slice(-depth, None)
@@ -25,7 +49,8 @@ def _inner_face(ndim: int, axis: int, side: int, depth: int = 1):
 
 def dirichlet(A: jnp.ndarray, value, axes: Sequence[int] | None = None, depth: int = 1):
     """Fix boundary faces to ``value`` (scalar or broadcastable)."""
-    axes = range(A.ndim) if axes is None else axes
+    axes = tuple(range(A.ndim) if axes is None else axes)
+    check_depth(A.shape, "dirichlet", axes, depth)
     for ax in axes:
         for side in (0, 1):
             A = A.at[_face(A.ndim, ax, side, depth)].set(value)
@@ -34,7 +59,8 @@ def dirichlet(A: jnp.ndarray, value, axes: Sequence[int] | None = None, depth: i
 
 def neumann0(A: jnp.ndarray, axes: Sequence[int] | None = None, depth: int = 1):
     """Zero-flux: copy the first interior layer onto the boundary layer."""
-    axes = range(A.ndim) if axes is None else axes
+    axes = tuple(range(A.ndim) if axes is None else axes)
+    check_depth(A.shape, "neumann0", axes, depth)
     for ax in axes:
         for side in (0, 1):
             A = A.at[_face(A.ndim, ax, side, depth)].set(
@@ -45,7 +71,8 @@ def neumann0(A: jnp.ndarray, axes: Sequence[int] | None = None, depth: int = 1):
 
 def periodic(A: jnp.ndarray, axes: Sequence[int] | None = None, depth: int = 1):
     """Wrap: boundary layers mirror the opposite interior layers."""
-    axes = range(A.ndim) if axes is None else axes
+    axes = tuple(range(A.ndim) if axes is None else axes)
+    check_depth(A.shape, "periodic", axes, depth)
     for ax in axes:
         n = A.shape[ax]
         lo_src = [slice(None)] * A.ndim

@@ -28,13 +28,30 @@ are *fields*, everything else is a *scalar*. Every name in ``outputs``
 must be a field argument; its previous contents provide the boundary
 values (the paper's ``@inn(T2) = ...`` semantics).
 
+Footprint inference (the stencil IR): before anything runs, the update
+function is traced ONCE with symbolic window objects (``repro.ir``) that
+implement the same relative-slice protocol as the ``fd`` operators. The
+trace yields per-field, per-axis halo depths — ``radius`` no longer needs
+declaring. A declared ``radius`` is kept as a cross-check: a mismatch
+against the inferred footprint raises a pointed ``ValueError``; if the
+update uses constructs the tracer cannot analyze (``jnp.*`` calls,
+integer indexing), a declared ``radius`` selects the legacy symmetric
+geometry instead, and an undeclared one reports why inference failed.
+
+Boundary conditions: ``bc={"T2": BoundaryCondition("neumann0"), ...}``
+(or bare kind strings) declares each output's condition, realized by the
+engine itself — inside the fused Pallas launch (dirichlet/neumann0, also
+between the sweeps of ``run_steps(k)``) or as a face-slab scatter fused
+into the surrounding jit (periodic) — bitwise-equal to applying the
+``core.boundary`` post-pass after every step.
+
 Coupled systems: ``outputs`` may name several fields — the whole coupled
 update runs as ONE fused Pallas launch. Fields may be staggered: a field
-up to ``radius`` shorter than the (per-axis maximal) base shape lives on
-cell faces, e.g. the Darcy flux ``qx`` of shape ``(nx-1, ny)`` next to
-cell-centered ``phi``/``Pe`` of shape ``(nx, ny)``. Per-output write
-semantics follow the shape of the returned update along each axis:
-``base - 2*radius`` extent writes the interior (``@inn``, boundary ring
+up to the footprint band shorter than the (per-axis maximal) base shape
+lives on cell faces, e.g. the Darcy flux ``qx`` of shape ``(nx-1, ny)``
+next to cell-centered ``phi``/``Pe`` of shape ``(nx, ny)``. Per-output
+write semantics follow the shape of the returned update along each axis:
+a symmetric interior margin writes the interior (``@inn``, boundary ring
 preserved), full-field extent writes everything (``@all`` — mandatory on
 staggered axes). See kernels/stencil.py for the window geometry.
 """
@@ -49,6 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import stencil as _stencil
+from .. import ir as _ir
 
 _BACKENDS = ("jnp", "pallas")
 
@@ -70,17 +88,23 @@ class ParallelStencil:
     def parallel(
         self,
         outputs: Sequence[str],
-        radius: int = 1,
+        radius: int | None = None,
         tile: Sequence[int] | None = None,
         vmem_budget: int = _stencil.DEFAULT_VMEM_BUDGET,
         rotations: Mapping[str, str] | None = None,
+        bc: Mapping[str, Any] | None = None,
     ) -> Callable[[Callable], "StencilKernel"]:
-        """``rotations`` maps each output field to the input field it becomes
-        on the next time step (e.g. ``{"T2": "T"}``) — required for the
-        temporally-blocked ``run_steps(k>1)`` path."""
+        """``radius`` is optional: the stencil IR infers per-field,
+        per-axis footprints from the update function itself; declaring it
+        adds a cross-check (ValueError on mismatch) and a fallback
+        geometry for untraceable updates. ``rotations`` maps each output
+        field to the input field it becomes on the next time step (e.g.
+        ``{"T2": "T"}``) — required for the temporally-blocked
+        ``run_steps(k>1)`` path. ``bc`` declares per-output boundary
+        conditions fused into the engine's step."""
         def deco(fn: Callable) -> StencilKernel:
             return StencilKernel(self, fn, tuple(outputs), radius, tile,
-                                 vmem_budget, rotations)
+                                 vmem_budget, rotations, bc)
 
         return deco
 
@@ -92,12 +116,28 @@ def init_parallel_stencil(
     return ParallelStencil(backend=backend, dtype=dtype, ndims=ndims, interpret=interpret)
 
 
+@dataclasses.dataclass(frozen=True)
+class KernelGeometry:
+    """Resolved launch geometry of one kernel instance (per field-shape
+    set): the traced IR (None when the legacy declared-radius fallback is
+    active), the staggering band, and the per-axis window halo."""
+
+    ir: _ir.StencilIR | None
+    band: int                                  # staggering band radius
+    halos: tuple[tuple[int, int], ...] | None  # per-axis (lo, hi) or None
+
+    @property
+    def inferred(self) -> bool:
+        return self.ir is not None
+
+
 class StencilKernel:
     """A compiled-on-first-use, shape-polymorphic stencil kernel."""
 
     def __init__(self, ps: ParallelStencil, fn: Callable, outputs: tuple[str, ...],
-                 radius: int, tile, vmem_budget: int,
-                 rotations: Mapping[str, str] | None = None):
+                 radius: int | None, tile, vmem_budget: int,
+                 rotations: Mapping[str, str] | None = None,
+                 bc: Mapping[str, Any] | None = None):
         self.ps = ps
         self.fn = fn
         self.outputs = outputs
@@ -105,7 +145,9 @@ class StencilKernel:
         self.tile = tile
         self.vmem_budget = vmem_budget
         self.rotations = dict(rotations) if rotations else None
+        self.bc = _ir.bc.normalize_bcs(bc, outputs, ps.ndims)
         self._cache: dict = {}
+        self._geom_cache: dict = {}
         functools.update_wrapper(self, fn)
 
     # -- argument classification ------------------------------------------
@@ -122,25 +164,103 @@ class StencilKernel:
         base = tuple(
             max(s[a] for s in shapes.values()) for a in range(self.ps.ndims)
         )
-        r = self.radius
-        for n, s in shapes.items():
-            off = tuple(b - x for b, x in zip(base, s))
-            if any(o > r for o in off):
-                raise ValueError(
-                    f"field {n!r} shape {s} is inconsistent with the coupled "
-                    f"system's base shape {base}: per-axis offsets {off} "
-                    f"exceed the staggering band [0, radius={r}] — fields of "
-                    "one system must agree up to face/cell staggering"
-                )
         for o in self.outputs:
             if o not in fields:
                 raise ValueError(f"output {o!r} is not a field argument")
         return fields, scalars, base, shapes
 
+    # -- footprint inference ------------------------------------------------
+    def _geometry(self, base, shapes: Mapping[str, tuple],
+                  scalar_names: Sequence[str]) -> KernelGeometry:
+        """Trace the update once per field-shape set; derive and validate
+        the launch geometry (footprint halos, staggering band, bc fit)."""
+        key = (base, tuple(sorted(shapes.items())), tuple(sorted(scalar_names)))
+        geom = self._geom_cache.get(key)
+        if geom is not None:
+            return geom
+
+        def update(fdict, sdict):
+            return self.fn(**fdict, **sdict)
+
+        try:
+            ir = _ir.trace_stencil(update, shapes, self.outputs, scalar_names)
+        except _ir.TraceError as e:
+            if self.radius is None:
+                raise ValueError(
+                    f"footprint inference failed for kernel "
+                    f"{getattr(self.fn, '__name__', '?')!r} and no radius "
+                    f"was declared — declare radius= on @parallel to use "
+                    f"the legacy symmetric geometry. Trace error: {e}"
+                ) from e
+            ir = None
+
+        if ir is not None and self.radius is not None \
+                and ir.inferred_radius != self.radius:
+            raise ValueError(
+                f"declared radius={self.radius} does not match the inferred "
+                f"footprint of kernel {getattr(self.fn, '__name__', '?')!r}: "
+                f"per-axis window halo {ir.halo} and write rings "
+                f"{tuple(ir.write_rings.values())} imply radius "
+                f"{ir.inferred_radius} (drop radius= to use the inferred "
+                "geometry, or fix the declaration)"
+            )
+
+        band = self.radius if self.radius is not None \
+            else max(ir.inferred_radius, 1)
+        for n, s in shapes.items():
+            off = tuple(b - x for b, x in zip(base, s))
+            if any(o < 0 or o > band for o in off):
+                raise ValueError(
+                    f"field {n!r} shape {s} is inconsistent with the coupled "
+                    f"system's base shape {base}: per-axis offsets {off} "
+                    f"exceed the staggering band [0, radius={band}] — fields "
+                    "of one system must agree up to face/cell staggering"
+                )
+        # bc face depths must fit the actual field extents
+        _ir.bc.normalize_bcs(self.bc, self.outputs, self.ps.ndims,
+                             field_shapes=shapes)
+        geom = KernelGeometry(ir=ir, band=band,
+                              halos=None if ir is None else ir.halo)
+        self._geom_cache[key] = geom
+        return geom
+
+    def stencil_ir(self, **kwargs) -> _ir.StencilIR:
+        """The kernel's traced IR for a given field set. Accepts the same
+        keyword arguments as a call — arrays, or bare shape tuples for
+        the fields (scalars may be omitted or given any value)."""
+        shapes, scalar_names = {}, []
+        for name, v in kwargs.items():
+            if isinstance(v, (tuple, list)) and all(
+                    isinstance(x, (int, np.integer)) for x in v):
+                if len(v) == self.ps.ndims:
+                    shapes[name] = tuple(int(x) for x in v)
+                else:
+                    scalar_names.append(name)
+            elif hasattr(v, "ndim") and getattr(v, "ndim", 0) == self.ps.ndims:
+                shapes[name] = tuple(np.shape(v))
+            else:
+                scalar_names.append(name)
+        if not shapes:
+            raise ValueError("no field shapes given")
+        base = tuple(max(s[a] for s in shapes.values())
+                     for a in range(self.ps.ndims))
+        geom = self._geometry(base, shapes, tuple(scalar_names))
+        if geom.ir is None:
+            raise ValueError(
+                "kernel is running on the legacy declared-radius fallback; "
+                "no IR is available"
+            )
+        return geom.ir
+
+    def cost_model(self, **kwargs) -> _ir.StencilCostModel:
+        """Analytic flop/byte cost model for a given field set."""
+        return _ir.StencilCostModel.from_ir(self.stencil_ir(**kwargs),
+                                            self.ps.dtype.itemsize)
+
     # -- backends -----------------------------------------------------------
-    def _run_jnp(self, fields, scalars, base):
+    def _run_jnp(self, fields, scalars, base, geom: KernelGeometry):
         updates = self.fn(**fields, **scalars)
-        r = self.radius
+        ring = self.radius if geom.ir is None else None
         out = {}
         for name in self.outputs:
             prev = fields[name]
@@ -150,15 +270,21 @@ class StencilKernel:
             # the staggered-axes-must-be-`all` rule), so a kernel that
             # traces on one backend traces on both.
             off = tuple(b - s for b, s in zip(base, prev.shape))
-            modes = _stencil._write_modes(upd.shape, prev.shape, r, off, name)
+            modes, rings = _stencil.write_geometry(
+                upd.shape, prev.shape, off, name, ring)
             idx = tuple(
-                slice(None) if m == "all" else slice(r, prev.shape[a] - r)
-                for a, m in enumerate(modes)
+                slice(None) if m == "all" else slice(w, prev.shape[a] - w)
+                for a, (m, w) in enumerate(zip(modes, rings))
             )
-            out[name] = prev.at[idx].set(upd)
+            res = prev.at[idx].set(upd)
+            cond = self.bc.get(name)
+            if cond is not None:
+                res = cond.apply(res)
+            out[name] = res
         return out
 
-    def _run_pallas(self, fields, scalars, base, shapes, nsteps: int = 1):
+    def _run_pallas(self, fields, scalars, base, shapes,
+                    geom: KernelGeometry, nsteps: int = 1):
         key = (base, tuple(sorted(shapes.items())), tuple(sorted(scalars)),
                nsteps)
         run = self._cache.get(key)
@@ -175,7 +301,7 @@ class StencilKernel:
                 out_names=self.outputs,
                 scalar_names=scalar_names,
                 shape=base,
-                radius=self.radius,
+                radius=geom.band,
                 dtype=self.ps.dtype,
                 tile=self.tile,
                 vmem_budget=self.vmem_budget,
@@ -183,54 +309,74 @@ class StencilKernel:
                 nsteps=nsteps,
                 rotations=self.rotations,
                 field_shapes=shapes,
+                halos=geom.halos,
+                bc=self.bc,
             )
             self._cache[key] = run
         return run(fields, scalars)
 
     def __call__(self, **kwargs):
         fields, scalars, base, shapes = self._split(kwargs)
+        geom = self._geometry(base, shapes, tuple(scalars))
         if self.ps.backend == "pallas":
-            outs = self._run_pallas(fields, scalars, base, shapes)
+            outs = self._run_pallas(fields, scalars, base, shapes, geom)
         else:
-            outs = self._run_jnp(fields, scalars, base)
+            outs = self._run_jnp(fields, scalars, base, geom)
         if len(self.outputs) == 1:
             return outs[self.outputs[0]]
         return outs
+
+    def _check_rotations(self):
+        if not self.rotations or set(self.outputs) - set(self.rotations):
+            raise ValueError(
+                "run_steps(nsteps>1) requires rotations covering every output "
+                "(pass rotations={'T2': 'T'}-style mapping to @parallel)"
+            )
 
     def run_steps(self, nsteps: int, **kwargs):
         """Advance ``nsteps`` fused time steps; returns the *final* outputs
         (same structure as ``__call__``).
 
         The pallas backend runs one temporally-blocked kernel launch
-        (``k*radius`` halo windows, k in-kernel sweeps — each field crosses
-        HBM once per k steps). The jnp backend realizes the identical
-        semantics as k unrolled single steps with the ``rotations``
-        double-buffer rotation; under ``jax.jit`` XLA fuses the chain and
-        elides the intermediate buffers. Both are bitwise-consistent with
-        k sequential ``__call__``s when the rotation buffers agree on their
+        (k stacked halo margins, k in-kernel sweeps — each field crosses
+        HBM once per k steps), with declared boundary conditions applied
+        between sweeps exactly like the post-pass between sequential
+        steps. The jnp backend realizes the identical semantics as k
+        unrolled single steps with the ``rotations`` double-buffer
+        rotation; under ``jax.jit`` XLA fuses the chain and elides the
+        intermediate buffers. Both are bitwise-consistent with k
+        sequential ``__call__``s when the rotation buffers agree on their
         boundary rings.
+
+        Periodic conditions wrap across the whole domain and cannot run
+        inside local windows; the pallas path then falls back to k
+        sequential fused launches (bitwise-identical, k HBM round trips).
         """
         nsteps = int(nsteps)
         if nsteps < 1:
             raise ValueError(f"nsteps must be >= 1, got {nsteps}")
         if nsteps == 1:
             return self(**kwargs)
-        if not self.rotations or set(self.outputs) - set(self.rotations):
-            raise ValueError(
-                "run_steps(nsteps>1) requires rotations covering every output "
-                "(pass rotations={'T2': 'T'}-style mapping to @parallel)"
-            )
+        self._check_rotations()
         fields, scalars, base, shapes = self._split(kwargs)
-        if self.ps.backend == "pallas":
-            outs = self._run_pallas(fields, scalars, base, shapes, nsteps)
+        geom = self._geometry(base, shapes, tuple(scalars))
+        periodic = any(c.kind == "periodic" for c in self.bc.values())
+        if self.ps.backend == "pallas" and not periodic:
+            outs = self._run_pallas(fields, scalars, base, shapes, geom,
+                                    nsteps)
         else:
             # True double-buffer rotation, unrolled: sweep s scatters into
             # the stale buffer of the (out, target) pair, which is dead two
             # sweeps later — under jit XLA turns those scatters into
-            # in-place updates instead of per-launch copies.
+            # in-place updates instead of per-launch copies. (Also the
+            # pallas realization when a periodic bc forbids in-window
+            # temporal blocking.)
+            step = (self._run_jnp if self.ps.backend == "jnp"
+                    else lambda f, s, b, g: self._run_pallas(f, s, b,
+                                                             shapes, g))
             cur = dict(fields)
             for s in range(nsteps):
-                outs = self._run_jnp(cur, scalars, base)
+                outs = step(cur, scalars, base, geom)
                 if s < nsteps - 1:
                     for o, tgt in self.rotations.items():
                         cur[o], cur[tgt] = cur[tgt], outs[o]

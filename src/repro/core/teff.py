@@ -82,6 +82,21 @@ def halo_compute_overhead(block, radius: int, nsteps: int) -> float:
     return total / ideal - 1.0
 
 
+def io_counts_from_ir(ir) -> tuple[int, int]:
+    """(n_read, n_write) derived from a traced ``repro.ir.StencilIR``
+    instead of hand-counting which fields cross HBM — the IR knows which
+    arguments the update actually reads."""
+    return ir.io_counts()
+
+
+def a_eff_from_ir(ir, itemsize: int, nsteps: int = 1) -> float:
+    """A_eff derived from the stencil IR: exact per-field byte volumes
+    (staggered fields at their own extents), divided by the temporal-
+    blocking depth. Replaces hand-supplied ``n_read``/``n_write`` for any
+    kernel built through ``@parallel``."""
+    return ir.io_bytes(itemsize) / max(int(nsteps), 1)
+
+
 def t_eff(a_eff_bytes: float, seconds: float) -> float:
     """Effective throughput in bytes/s."""
     return a_eff_bytes / seconds

@@ -29,12 +29,40 @@ def _slab(arr, axis: int, start: int, size: int):
     return arr[tuple(idx)]
 
 
+def _axis_depths(depths, radius: int, n_axes: int):
+    """Normalize per-axis exchange depths: None -> full radius; an int
+    broadcasts; entries are (lo, hi) pairs or ints, clamped to the ghost
+    width (the allocation contract stays ``radius`` layers)."""
+    if depths is None:
+        return [(radius, radius)] * n_axes
+    if isinstance(depths, int):
+        depths = [depths] * n_axes
+    depths = list(depths)
+    if len(depths) != n_axes:
+        raise ValueError(
+            f"exchange depths {depths} cover {len(depths)} axes but "
+            f"{n_axes} array axes are decomposed — a short list would "
+            "silently skip the trailing axes' ghost refresh"
+        )
+    out = []
+    for d in depths:
+        lo, hi = (d, d) if isinstance(d, int) else (int(d[0]), int(d[1]))
+        if lo > radius or hi > radius or lo < 0 or hi < 0:
+            raise ValueError(
+                f"exchange depth {(lo, hi)} outside the allocated ghost "
+                f"width [0, radius={radius}]"
+            )
+        out.append((lo, hi))
+    return out
+
+
 def halo_exchange(
     local: jax.Array,
     mesh_axes: Sequence[str],
     array_axes: Sequence[int] | None = None,
     radius: int = 1,
     periodic: bool | Sequence[bool] = False,
+    depths=None,
 ) -> jax.Array:
     """Refresh ghost layers of ``local`` along each decomposed axis.
 
@@ -42,43 +70,56 @@ def halo_exchange(
       local: rank-local array with ``radius`` ghost layers on decomposed axes.
       mesh_axes: mesh axis name per decomposed array axis.
       array_axes: which array axes are decomposed (default: first len(mesh_axes)).
-      radius: ghost width.
+      radius: ghost width (the allocation).
       periodic: global wrap per axis (scalar broadcasts).
+      depths: optional per-axis (lo, hi) *exchange* depths <= radius (the
+        footprint-inferred read depths): only the innermost ``lo`` cells
+        of the low ghost ring / ``hi`` of the high ring are refreshed, so
+        a field the stencil reads one-sided (or not at all) moves fewer
+        (or no) bytes. ``None`` refreshes the full ring.
     """
     if array_axes is None:
         array_axes = list(range(len(mesh_axes)))
     if isinstance(periodic, bool):
         periodic = [periodic] * len(mesh_axes)
     r = radius
-    for mesh_ax, arr_ax, per in zip(mesh_axes, array_axes, periodic):
+    depths = _axis_depths(depths, r, len(mesh_axes))
+    for mesh_ax, arr_ax, per, (d_lo, d_hi) in zip(mesh_axes, array_axes,
+                                                  periodic, depths):
         n = _axis_size(mesh_ax)
         if n == 1:
             if per:
                 # self-wrap: ghost layers come from own opposite interior
-                lo_src = _slab(local, arr_ax, -2 * r, r)
-                hi_src = _slab(local, arr_ax, r, r)
-                local = _set_slab(local, arr_ax, 0, lo_src)
-                local = _set_slab(local, arr_ax, -r, hi_src)
+                if d_lo:
+                    lo_src = _slab(local, arr_ax, -(r + d_lo), d_lo)
+                    local = _set_slab(local, arr_ax, r - d_lo, lo_src)
+                if d_hi:
+                    hi_src = _slab(local, arr_ax, r, d_hi)
+                    local = _set_slab(local, arr_ax, -r, hi_src)
             continue
         idx = lax.axis_index(mesh_ax)
-        # --- send my high interior slab to the right neighbor's low ghost ---
-        send_hi = _slab(local, arr_ax, -2 * r, r)
-        perm_r = [(i, i + 1) for i in range(n - 1)]
-        if per:
-            perm_r.append((n - 1, 0))
-        recv_lo = lax.ppermute(send_hi, mesh_ax, perm_r)
-        has_left = (idx > 0) | (per and n > 1)
-        cur_lo = _slab(local, arr_ax, 0, r)
-        local = _set_slab(local, arr_ax, 0, jnp.where(has_left, recv_lo, cur_lo))
-        # --- send my low interior slab to the left neighbor's high ghost ---
-        send_lo = _slab(local, arr_ax, r, r)
-        perm_l = [(i + 1, i) for i in range(n - 1)]
-        if per:
-            perm_l.append((0, n - 1))
-        recv_hi = lax.ppermute(send_lo, mesh_ax, perm_l)
-        has_right = (idx < n - 1) | (per and n > 1)
-        cur_hi = _slab(local, arr_ax, -r, r)
-        local = _set_slab(local, arr_ax, -r, jnp.where(has_right, recv_hi, cur_hi))
+        if d_lo:
+            # --- my high interior slab -> right neighbor's low ghost ---
+            send_hi = _slab(local, arr_ax, -(r + d_lo), d_lo)
+            perm_r = [(i, i + 1) for i in range(n - 1)]
+            if per:
+                perm_r.append((n - 1, 0))
+            recv_lo = lax.ppermute(send_hi, mesh_ax, perm_r)
+            has_left = (idx > 0) | (per and n > 1)
+            cur_lo = _slab(local, arr_ax, r - d_lo, d_lo)
+            local = _set_slab(local, arr_ax, r - d_lo,
+                              jnp.where(has_left, recv_lo, cur_lo))
+        if d_hi:
+            # --- my low interior slab -> left neighbor's high ghost ---
+            send_lo = _slab(local, arr_ax, r, d_hi)
+            perm_l = [(i + 1, i) for i in range(n - 1)]
+            if per:
+                perm_l.append((0, n - 1))
+            recv_hi = lax.ppermute(send_lo, mesh_ax, perm_l)
+            has_right = (idx < n - 1) | (per and n > 1)
+            cur_hi = _slab(local, arr_ax, -r, d_hi)
+            local = _set_slab(local, arr_ax, -r,
+                              jnp.where(has_right, recv_hi, cur_hi))
     return local
 
 
@@ -92,6 +133,16 @@ def _set_slab(arr, axis: int, start: int, value):
     return arr.at[tuple(idx)].set(value)
 
 
+def _field_depths(depths, names, radius: int, n_axes: int) -> dict:
+    """Normalize a per-field depth mapping (missing fields or None ->
+    full radius; entries follow :func:`_axis_depths`)."""
+    out = {}
+    for f in names:
+        d = None if depths is None else depths.get(f)
+        out[f] = _axis_depths(d, radius, n_axes)
+    return out
+
+
 def grouped_halo_exchange(
     fields: Mapping[str, jax.Array],
     names: Sequence[str],
@@ -99,6 +150,7 @@ def grouped_halo_exchange(
     array_axes: Sequence[int] | None = None,
     radius: int = 1,
     periodic: bool | Sequence[bool] = False,
+    depths: Mapping[str, object] | None = None,
 ) -> dict:
     """Refresh ghost layers of *all* ``names`` with ONE message per
     (axis, direction) round-trip instead of one per field.
@@ -111,6 +163,11 @@ def grouped_halo_exchange(
     all of a system's MPI messages together. Mixed-shape staggered fields
     group fine: only the flattened slab sizes differ.
 
+    ``depths`` (per field, per axis (lo, hi) <= radius — the footprint-
+    inferred read depths) shrinks each field's slab to what the stencil
+    actually reads; a field with depth 0 on a side contributes nothing to
+    that direction's payload.
+
     Values are identical to per-field :func:`halo_exchange` calls.
     """
     if array_axes is None:
@@ -119,19 +176,24 @@ def grouped_halo_exchange(
         periodic = [periodic] * len(mesh_axes)
     out = dict(fields)
     r = radius
+    fdep = _field_depths(depths, names, r, len(mesh_axes))
     # dtype groups (ppermute payloads must be homogeneous)
     groups: dict = {}
     for n in names:
         groups.setdefault(jnp.asarray(out[n]).dtype, []).append(n)
-    for mesh_ax, arr_ax, per in zip(mesh_axes, array_axes, periodic):
+    for ax_i, (mesh_ax, arr_ax, per) in enumerate(
+            zip(mesh_axes, array_axes, periodic)):
         n_ranks = _axis_size(mesh_ax)
         if n_ranks == 1:
             if per:
                 for f in names:
-                    lo_src = _slab(out[f], arr_ax, -2 * r, r)
-                    hi_src = _slab(out[f], arr_ax, r, r)
-                    out[f] = _set_slab(out[f], arr_ax, 0, lo_src)
-                    out[f] = _set_slab(out[f], arr_ax, -r, hi_src)
+                    d_lo, d_hi = fdep[f][ax_i]
+                    if d_lo:
+                        lo_src = _slab(out[f], arr_ax, -(r + d_lo), d_lo)
+                        out[f] = _set_slab(out[f], arr_ax, r - d_lo, lo_src)
+                    if d_hi:
+                        hi_src = _slab(out[f], arr_ax, r, d_hi)
+                        out[f] = _set_slab(out[f], arr_ax, -r, hi_src)
             continue
         idx = lax.axis_index(mesh_ax)
         perm_r = [(i, i + 1) for i in range(n_ranks - 1)]
@@ -143,29 +205,41 @@ def grouped_halo_exchange(
         has_right = (idx < n_ranks - 1) | (per and n_ranks > 1)
         for grp in groups.values():
             # --- high interior slabs -> right neighbors' low ghosts ---
-            send_hi = [_slab(out[f], arr_ax, -2 * r, r) for f in grp]
-            recv = lax.ppermute(
-                jnp.concatenate([s.reshape(-1) for s in send_hi]),
-                mesh_ax, perm_r)
-            ofs = 0
-            for f, s in zip(grp, send_hi):
-                piece = recv[ofs:ofs + s.size].reshape(s.shape)
-                ofs += s.size
-                cur = _slab(out[f], arr_ax, 0, r)
-                out[f] = _set_slab(out[f], arr_ax, 0,
-                                   jnp.where(has_left, piece, cur))
+            lo_grp = [f for f in grp if fdep[f][ax_i][0]]
+            if lo_grp:
+                send_hi = [
+                    _slab(out[f], arr_ax, -(r + fdep[f][ax_i][0]),
+                          fdep[f][ax_i][0]) for f in lo_grp
+                ]
+                recv = lax.ppermute(
+                    jnp.concatenate([s.reshape(-1) for s in send_hi]),
+                    mesh_ax, perm_r)
+                ofs = 0
+                for f, s in zip(lo_grp, send_hi):
+                    piece = recv[ofs:ofs + s.size].reshape(s.shape)
+                    ofs += s.size
+                    d_lo = fdep[f][ax_i][0]
+                    cur = _slab(out[f], arr_ax, r - d_lo, d_lo)
+                    out[f] = _set_slab(out[f], arr_ax, r - d_lo,
+                                       jnp.where(has_left, piece, cur))
             # --- low interior slabs -> left neighbors' high ghosts ---
-            send_lo = [_slab(out[f], arr_ax, r, r) for f in grp]
-            recv = lax.ppermute(
-                jnp.concatenate([s.reshape(-1) for s in send_lo]),
-                mesh_ax, perm_l)
-            ofs = 0
-            for f, s in zip(grp, send_lo):
-                piece = recv[ofs:ofs + s.size].reshape(s.shape)
-                ofs += s.size
-                cur = _slab(out[f], arr_ax, -r, r)
-                out[f] = _set_slab(out[f], arr_ax, -r,
-                                   jnp.where(has_right, piece, cur))
+            hi_grp = [f for f in grp if fdep[f][ax_i][1]]
+            if hi_grp:
+                send_lo = [
+                    _slab(out[f], arr_ax, r, fdep[f][ax_i][1])
+                    for f in hi_grp
+                ]
+                recv = lax.ppermute(
+                    jnp.concatenate([s.reshape(-1) for s in send_lo]),
+                    mesh_ax, perm_l)
+                ofs = 0
+                for f, s in zip(hi_grp, send_lo):
+                    piece = recv[ofs:ofs + s.size].reshape(s.shape)
+                    ofs += s.size
+                    d_hi = fdep[f][ax_i][1]
+                    cur = _slab(out[f], arr_ax, -r, d_hi)
+                    out[f] = _set_slab(out[f], arr_ax, -r,
+                                       jnp.where(has_right, piece, cur))
     return out
 
 
@@ -176,17 +250,22 @@ def exchange_many(
     radius: int = 1,
     periodic=False,
     grouped: bool = True,
+    depths: Mapping[str, object] | None = None,
 ) -> dict:
     """Refresh ghost layers of several fields. ``grouped=True`` (default)
     sends the whole field group per (axis, direction) in one ppermute
     (:func:`grouped_halo_exchange`); ``grouped=False`` keeps the
-    one-permute-per-field reference path."""
+    one-permute-per-field reference path. ``depths`` tightens each
+    field's exchanged slab to its inferred per-axis (lo, hi) read depth
+    (see :func:`grouped_halo_exchange`)."""
     if grouped:
         return grouped_halo_exchange(fields, names, mesh_axes, radius=radius,
-                                     periodic=periodic)
+                                     periodic=periodic, depths=depths)
     out = dict(fields)
     for n in names:
-        out[n] = halo_exchange(out[n], mesh_axes, radius=radius, periodic=periodic)
+        out[n] = halo_exchange(
+            out[n], mesh_axes, radius=radius, periodic=periodic,
+            depths=None if depths is None else depths.get(n))
     return out
 
 

@@ -59,6 +59,27 @@ def _paste_shell(dst, src, axis: int, side: int, radius: int):
     return dst.at[tuple(di)].set(src[tuple(si)])
 
 
+def _kernel_geometry(kernel: StencilKernel, fields, scalars,
+                     exchange: Sequence[str], mesh_axes: Sequence[str]):
+    """(effective radius, per-exchanged-field exchange depths, ir) for
+    this field set. Footprint-inferred kernels tighten each field's ghost
+    refresh to its actual per-axis/per-side read depth on the decomposed
+    (leading) axes; the legacy declared-radius fallback exchanges the
+    full ring (depths=None, ir=None)."""
+    try:
+        ir = kernel.stencil_ir(**fields, **scalars)
+    except ValueError:
+        if kernel.radius is None:
+            raise  # untraceable AND undeclared: the kernel call would fail
+        return kernel.radius, None, None
+    r = kernel.radius if kernel.radius is not None \
+        else max(ir.inferred_radius, 1)
+    n_dec = len(mesh_axes)
+    depths = {f: ir.field_halo[f][:n_dec]
+              for f in exchange if f in ir.field_halo}
+    return r, depths, ir
+
+
 def sequential_step(
     kernel: StencilKernel,
     fields: Mapping[str, jax.Array],
@@ -68,8 +89,10 @@ def sequential_step(
     periodic=False,
 ):
     """Reference: exchange halos, then update. No overlap."""
-    r = kernel.radius
-    fresh = _halo.exchange_many(fields, exchange, mesh_axes, radius=r, periodic=periodic)
+    r, depths, _ = _kernel_geometry(kernel, fields, scalars, exchange,
+                                    mesh_axes)
+    fresh = _halo.exchange_many(fields, exchange, mesh_axes, radius=r,
+                                periodic=periodic, depths=depths)
     return kernel(**fresh, **scalars), fresh
 
 
@@ -85,16 +108,26 @@ def multi_step(
     """Temporal blocking across ranks: ONE deep halo exchange feeds k fused
     local steps — k× fewer messages (each k·r wide instead of r).
 
-    Local arrays must carry ``nsteps * kernel.radius`` ghost layers. After
-    the k local sweeps the owned interior (depth >= k·r from the local
-    edge) is exact: sweep s only needs time-s-correct values at depth
-    >= s·r, which the deep exchange provides. The ghost ring is stale
-    afterwards and must be re-exchanged before the next k-step block.
-    Rank-local (inside shard_map). Returns (final outputs, fresh fields).
+    Local arrays must carry ``nsteps * r`` ghost layers (r: declared or
+    inferred radius). After the k local sweeps the owned interior (depth
+    >= k·r from the local edge) is exact: sweep s only needs
+    time-s-correct values at depth >= s·d, which the deep exchange
+    provides — footprint-inferred kernels refresh only ``k * depth(F)``
+    per field, axis and side instead of the full ``k*r``. The ghost ring
+    is stale afterwards and must be re-exchanged before the next k-step
+    block. Rank-local (inside shard_map). Returns (final outputs, fresh
+    fields).
     """
-    r = kernel.radius
+    r, depths, _ = _kernel_geometry(kernel, fields, scalars, exchange,
+                                    mesh_axes)
+    if depths is not None:
+        depths = {
+            f: tuple((nsteps * lo, nsteps * hi) for lo, hi in d)
+            for f, d in depths.items()
+        }
     fresh = _halo.exchange_many(fields, exchange, mesh_axes,
-                                radius=nsteps * r, periodic=periodic)
+                                radius=nsteps * r, periodic=periodic,
+                                depths=depths)
     return kernel.run_steps(nsteps, **fresh, **scalars), fresh
 
 
@@ -114,7 +147,8 @@ def overlapped_step(
     the return mirrors the kernel's call convention — a bare array for
     single-output kernels, an out-name dict for coupled systems.
     """
-    r = kernel.radius
+    r, _, ir = _kernel_geometry(kernel, fields, scalars, exchange,
+                                mesh_axes)
     nd = fields[kernel.outputs[0]].ndim
     single = len(kernel.outputs) == 1
     # Per-axis base extent of the coupled set: staggered fields (shorter by
@@ -143,12 +177,25 @@ def overlapped_step(
     # 2) bulk update with stale halos — correct except the shell ring
     bulk = as_dict(kernel(**fields, **scalars))
 
-    # 3) recompute the shell per face from fresh slabs and paste
-    thickness = 3 * r
+    # 3) recompute the shell per face from fresh slabs and paste. The
+    #    slab must contain the shell's reads (support) and its writes
+    #    (ring): ghost r + shell r + max(support, ring) per face — the
+    #    inferred footprint trims the legacy 3r when the kernel reads
+    #    shallower than r toward that face.
+    if ir is not None:
+        w_max = tuple(max(rings[a] for rings in ir.write_rings.values())
+                      for a in range(nd))
+        thick = tuple(
+            (2 * r + max(ir.halo[a][1], w_max[a]),   # low face reads "up"
+             2 * r + max(ir.halo[a][0], w_max[a]))   # high face reads "down"
+            for a in range(nd)
+        )
+    else:
+        thick = ((3 * r, 3 * r),) * nd
     for axis in range(min(len(mesh_axes), nd)):
         for side in (0, 1):
             slab_fields = {
-                n: _face_slab(v, axis, side, thickness,
+                n: _face_slab(v, axis, side, thick[axis][side],
                               off=base[axis] - v.shape[axis])
                 for n, v in fresh.items()
             }

@@ -1,0 +1,170 @@
+"""Analytic cost models from the traced stencil IR.
+
+Exact per-launch flop counts (graph walk, shared subexpressions counted
+once — what XLA's CSE executes) and HBM byte counts (per-field extents,
+staggering included) yield:
+
+  * ``a_eff`` inputs for ``core.teff`` without hand-supplied
+    ``n_read``/``n_write`` (:meth:`StencilCostModel.a_eff_bytes`);
+  * a per-candidate (tile, nsteps) runtime prediction for the autotuner,
+    combining fetched-window traffic with the redundant halo-cone compute
+    of temporal blocking — cheap enough to prune the search space before
+    anything compiles (:meth:`StencilCostModel.predict_per_step_s`);
+  * the kernel's roofline position (arithmetic intensity vs the hardware
+    ridge) surfaced by ``launch.roofline.stencil_roofline``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping, Sequence
+
+from .trace import StencilIR
+
+__all__ = ["FlopCount", "count_flops", "StencilCostModel"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FlopCount:
+    """Elementwise operation counts (the FlopCount idiom of roofline
+    tooling): adds/subs/negs, muls, divs and pow evaluations."""
+
+    adds: int = 0
+    muls: int = 0
+    divs: int = 0
+    pows: int = 0
+
+    def total(self, pow_cost: int = 1) -> int:
+        """Total flops; ``pow_cost`` weights transcendental pow calls."""
+        return self.adds + self.muls + self.divs + pow_cost * self.pows
+
+    def __add__(self, other: "FlopCount") -> "FlopCount":
+        return FlopCount(self.adds + other.adds, self.muls + other.muls,
+                         self.divs + other.divs, self.pows + other.pows)
+
+    def __mul__(self, k: int) -> "FlopCount":
+        return FlopCount(self.adds * k, self.muls * k, self.divs * k,
+                         self.pows * k)
+
+    __rmul__ = __mul__
+
+    def to_dict(self) -> dict:
+        return {"adds": self.adds, "muls": self.muls, "divs": self.divs,
+                "pows": self.pows, "total": self.total()}
+
+
+def count_flops(exprs: Mapping[str, object]) -> FlopCount:
+    """Walk the expression graphs of all outputs, counting each unique
+    node once (Python-level sharing == the sharing XLA's CSE recovers),
+    at one op per element of the node's shape."""
+    seen: set[int] = set()
+    counts = {"adds": 0, "muls": 0, "divs": 0, "pows": 0}
+
+    def walk(node):
+        if id(node) in seen:
+            return
+        seen.add(id(node))
+        for c in getattr(node, "children", ()):
+            walk(c)
+        kind = node.flop_kind()
+        if kind is not None:
+            counts[kind] += math.prod(node.shape)
+
+    for e in exprs.values():
+        walk(e)
+    return FlopCount(**counts)
+
+
+def _as_pairs(halo, nd: int) -> tuple[tuple[int, int], ...]:
+    if isinstance(halo, int):
+        return ((halo, halo),) * nd
+    return tuple((int(p[0]), int(p[1])) if not isinstance(p, int) else (p, p)
+                 for p in halo)
+
+
+def halo_compute_overhead(block: Sequence[int],
+                          halo: Sequence[tuple[int, int]] | int,
+                          nsteps: int) -> float:
+    """Redundant-work fraction of a k-fused launch vs k ideal sweeps,
+    generalized to per-axis asymmetric halos (``teff.halo_compute_overhead``
+    is the symmetric special case)."""
+    k = max(int(nsteps), 1)
+    block = tuple(int(b) for b in block)
+    pairs = _as_pairs(halo, len(block))
+    ideal = k * math.prod(block)
+    total = sum(
+        math.prod(b + (k - 1 - s) * (lo + hi)
+                  for b, (lo, hi) in zip(block, pairs))
+        for s in range(k)
+    )
+    return total / ideal - 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilCostModel:
+    """Analytic per-step cost of one fused stencil launch."""
+
+    shape: tuple[int, ...]                    # base (cell-centered) extent
+    itemsize: int
+    flops: FlopCount                          # one sweep, whole grid
+    read_bytes: int                           # exact per-sweep HBM reads
+    write_bytes: int                          # exact per-sweep HBM writes
+    halo: tuple[tuple[int, int], ...]         # per-axis (lo, hi), one sweep
+    field_offsets: tuple[tuple[int, ...], ...]  # staggering of fetched fields
+
+    @classmethod
+    def from_ir(cls, ir: StencilIR, itemsize: int) -> "StencilCostModel":
+        rb = sum(math.prod(ir.field_shapes[f]) for f in ir.read_fields)
+        wb = sum(math.prod(ir.field_shapes[o]) for o in ir.out_names)
+        return cls(
+            shape=ir.base_shape,
+            itemsize=int(itemsize),
+            flops=count_flops(ir.exprs),
+            read_bytes=rb * itemsize,
+            write_bytes=wb * itemsize,
+            halo=ir.halo,
+            # the launch fetches a window for EVERY field argument
+            # (outputs ride along as boundary-copy sources), so the
+            # tile/k traffic model must count them all — only a_eff
+            # (ideal reuse) restricts to the read set
+            field_offsets=tuple(ir.offsets[f] for f in ir.field_shapes),
+        )
+
+    def a_eff_bytes(self, nsteps: int = 1) -> float:
+        """Ideal per-step HBM traffic (the paper's A_eff) under k-step
+        temporal blocking — derived, not hand-counted."""
+        return (self.read_bytes + self.write_bytes) / max(int(nsteps), 1)
+
+    @property
+    def intensity(self) -> float:
+        """Arithmetic intensity (flop/byte) of one sweep."""
+        bytes_ = self.read_bytes + self.write_bytes
+        return self.flops.total() / bytes_ if bytes_ else 0.0
+
+    def fetched_bytes_per_step(self, tile: Sequence[int], nsteps: int) -> float:
+        """HBM bytes actually moved per time step by the tiled launch:
+        every block fetches its (overlapping) halo-extended windows and
+        writes its output block; a k-fused launch amortizes both over k
+        steps. This is the footprint-aware refinement of ``a_eff`` that
+        makes small tiles with deep halos look as expensive as they are."""
+        k = max(int(nsteps), 1)
+        tile = tuple(int(b) for b in tile)
+        n_blocks = math.prod(-(-s // b) for s, b in zip(self.shape, tile))
+        win = sum(
+            math.prod(b + k * (lo + hi) - o
+                      for b, (lo, hi), o in zip(tile, self.halo, off))
+            for off in (self.field_offsets or ((0,) * len(tile),))
+        ) * self.itemsize
+        return (n_blocks * win + self.write_bytes) / k
+
+    def predict_per_step_s(self, tile: Sequence[int], nsteps: int,
+                           hw) -> float:
+        """Roofline-style per-step runtime prediction for one (tile, k)
+        candidate on ``hw`` (a ``teff.HardwareSpec``): max of the memory
+        term (fetched windows) and the compute term inflated by the
+        redundant halo-cone work of temporal blocking."""
+        k = max(int(nsteps), 1)
+        t_mem = self.fetched_bytes_per_step(tile, k) / hw.peak_bw
+        overhead = halo_compute_overhead(tile, self.halo, k)
+        t_comp = self.flops.total() * (1.0 + overhead) / hw.peak_flops
+        return max(t_mem, t_comp)

@@ -1,0 +1,218 @@
+"""Symbolic window objects — the tracing substrate of the stencil IR.
+
+A :class:`SymArray` stands in for a field (or any expression derived from
+one) during a single abstract evaluation of the user's update function.
+It implements exactly the protocol the ``core.fd`` relative-slice
+operators rely on — ``__getitem__`` with unit-stride slices plus
+elementwise arithmetic — and records, per upstream field and axis, the
+closed interval of *index offsets* the expression reads:
+
+    element ``j`` (in the expression's own frame) reads field cells
+    ``j + d`` for every ``d`` in ``reads[field][axis]``.
+
+Slicing shifts the interval (``A[1:]``'s element ``j`` reads ``A[j+1]``);
+combining two expressions unions the intervals. That is the accessor-
+range analysis of generic stencil libraries (Bianco & Varetto), done on
+plain Python objects in one pass — no jax tracing involved.
+
+Unsupported constructs (integer indexing, strided slices, broadcasting
+against mismatched shapes, ``jnp.*`` calls on symbolic values) raise
+:class:`TraceError`; callers with a declared ``radius`` fall back to the
+legacy symmetric-halo path, callers relying on inference get a pointed
+error.
+"""
+from __future__ import annotations
+
+import math
+from typing import Mapping
+
+__all__ = ["SymArray", "TraceError", "field"]
+
+
+class TraceError(ValueError):
+    """The update function used a construct the symbolic tracer cannot
+    analyze. With a declared ``radius`` the engine falls back to the
+    legacy symmetric-halo geometry; without one this propagates."""
+
+
+Interval = tuple[int, int]
+Reads = Mapping[str, tuple[Interval, ...]]
+
+_FLOPS = {"add": "adds", "sub": "adds", "neg": "adds",
+          "mul": "muls", "div": "divs", "pow": "pows"}
+
+
+def _merge_reads(a: Reads, b: Reads, ndim: int) -> dict:
+    out = {k: tuple(v) for k, v in a.items()}
+    for f, iv in b.items():
+        if f not in out:
+            out[f] = tuple(iv)
+        else:
+            out[f] = tuple(
+                (min(x[0], y[0]), max(x[1], y[1])) for x, y in zip(out[f], iv)
+            )
+    return out
+
+
+def _is_scalar(v) -> bool:
+    if isinstance(v, (int, float, complex, bool)):
+        return True
+    ndim = getattr(v, "ndim", None)
+    return ndim == 0  # 0-d numpy/jax scalars combine like python numbers
+
+
+class SymArray:
+    """One node of the traced stencil expression graph."""
+
+    __slots__ = ("op", "shape", "reads", "children", "scalar")
+    # Keep jnp from trying to __iter__/__array__ us into oblivion.
+    __array_priority__ = 1000
+
+    def __init__(self, op: str, shape: tuple[int, ...], reads: Reads,
+                 children: tuple = (), scalar=None):
+        self.op = op
+        self.shape = tuple(int(s) for s in shape)
+        self.reads = {k: tuple(tuple(p) for p in v) for k, v in reads.items()}
+        self.children = children
+        self.scalar = scalar
+
+    # -- numpy-ish surface --------------------------------------------------
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+    def __repr__(self):
+        return f"SymArray({self.op}, shape={self.shape})"
+
+    def __bool__(self):
+        raise TraceError(
+            "symbolic stencil values have no truth value — control flow on "
+            "field data cannot be traced (use jnp.where-free arithmetic or "
+            "declare radius= explicitly)"
+        )
+
+    def __iter__(self):
+        raise TraceError("symbolic stencil values are not iterable")
+
+    # -- slicing ------------------------------------------------------------
+    def __getitem__(self, idx):
+        if not isinstance(idx, tuple):
+            idx = (idx,)
+        if any(i is Ellipsis for i in idx):
+            n_given = sum(1 for i in idx if i is not Ellipsis)
+            fill = (slice(None),) * (self.ndim - n_given)
+            pos = idx.index(Ellipsis)
+            idx = idx[:pos] + fill + idx[pos + 1:]
+        idx = idx + (slice(None),) * (self.ndim - len(idx))
+        if len(idx) > self.ndim:
+            raise TraceError(
+                f"too many indices for symbolic array of rank {self.ndim}"
+            )
+        shape, shifts = [], []
+        for a, (sl, n) in enumerate(zip(idx, self.shape)):
+            if not isinstance(sl, slice):
+                raise TraceError(
+                    f"unsupported index {sl!r} along axis {a} — the stencil "
+                    "IR traces unit-stride slices only (no integer/fancy "
+                    "indexing inside @parallel update functions)"
+                )
+            start, stop, step = sl.indices(n)
+            if step != 1:
+                raise TraceError(
+                    f"strided slice (step={step}) along axis {a} is outside "
+                    "the relative-slice protocol"
+                )
+            ext = stop - start
+            if ext <= 0:
+                raise TraceError(
+                    f"slice {sl} along axis {a} of extent {n} is empty"
+                )
+            shape.append(ext)
+            shifts.append(start)
+        reads = {
+            f: tuple((lo + sh, hi + sh) for (lo, hi), sh in zip(iv, shifts))
+            for f, iv in self.reads.items()
+        }
+        return SymArray("slice", tuple(shape), reads, (self,))
+
+    # -- arithmetic ---------------------------------------------------------
+    def _binary(self, other, op: str, reflected: bool = False):
+        if isinstance(other, SymArray):
+            if other.shape != self.shape:
+                raise TraceError(
+                    f"shape mismatch in '{op}': {self.shape} vs "
+                    f"{other.shape} — broadcasting between differently-"
+                    "shaped stencil expressions is outside the relative-"
+                    "slice protocol"
+                )
+            reads = _merge_reads(self.reads, other.reads, self.ndim)
+            kids = (other, self) if reflected else (self, other)
+            return SymArray(op, self.shape, reads, kids)
+        if _is_scalar(other):
+            return SymArray(op, self.shape, self.reads, (self,), scalar=other)
+        raise TraceError(
+            f"cannot combine symbolic stencil value with {type(other).__name__} "
+            "in '" + op + "' — arrays must enter the kernel as field "
+            "arguments to be traced"
+        )
+
+    def __add__(self, o):
+        return self._binary(o, "add")
+
+    def __radd__(self, o):
+        return self._binary(o, "add", reflected=True)
+
+    def __sub__(self, o):
+        return self._binary(o, "sub")
+
+    def __rsub__(self, o):
+        return self._binary(o, "sub", reflected=True)
+
+    def __mul__(self, o):
+        return self._binary(o, "mul")
+
+    def __rmul__(self, o):
+        return self._binary(o, "mul", reflected=True)
+
+    def __truediv__(self, o):
+        return self._binary(o, "div")
+
+    def __rtruediv__(self, o):
+        return self._binary(o, "div", reflected=True)
+
+    def __pow__(self, o):
+        return self._binary(o, "pow")
+
+    def __rpow__(self, o):
+        return self._binary(o, "pow", reflected=True)
+
+    def __neg__(self):
+        return SymArray("neg", self.shape, self.reads, (self,))
+
+    def __pos__(self):
+        return self
+
+    def astype(self, _dtype):
+        return self
+
+    def _no_compare(self, *_):
+        raise TraceError(
+            "comparisons on symbolic stencil values are not traceable"
+        )
+
+    __lt__ = __le__ = __gt__ = __ge__ = _no_compare
+
+    def flop_kind(self) -> str | None:
+        """Flop-counter category of this node (None for free ops)."""
+        return _FLOPS.get(self.op)
+
+
+def field(name: str, shape) -> SymArray:
+    """A symbolic leaf: element ``j`` of field ``name`` reads exactly
+    field cell ``j`` (offset interval ``[0, 0]`` per axis)."""
+    shape = tuple(int(s) for s in shape)
+    return SymArray("leaf", shape, {name: ((0, 0),) * len(shape)})

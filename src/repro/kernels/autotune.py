@@ -34,16 +34,19 @@ class TuneResult:
     nsteps: int
     per_step_s: float
     candidates_tried: int
+    candidates_pruned: int = 0   # dropped by the analytic model pre-compile
 
     def to_json(self) -> dict:
         return {"tile": list(self.tile), "nsteps": self.nsteps,
                 "per_step_s": self.per_step_s,
-                "candidates_tried": self.candidates_tried}
+                "candidates_tried": self.candidates_tried,
+                "candidates_pruned": self.candidates_pruned}
 
     @classmethod
     def from_json(cls, d: dict) -> "TuneResult":
         return cls(tuple(d["tile"]), int(d["nsteps"]), float(d["per_step_s"]),
-                   int(d.get("candidates_tried", 0)))
+                   int(d.get("candidates_tried", 0)),
+                   int(d.get("candidates_pruned", 0)))
 
 
 _CACHE: dict[tuple, TuneResult] = {}
@@ -97,12 +100,15 @@ def tile_candidates(
 def cache_key(shape, dtype, radius: int, n_fields: int, tag: str = "",
               nsteps_candidates: Sequence[int] = (),
               tiles=None, vmem_budget: int = 0,
-              field_offsets: Sequence[Sequence[int]] | None = None) -> tuple:
+              field_offsets: Sequence[Sequence[int]] | None = None,
+              prune: tuple | None = None) -> tuple:
     """Memo key covers the full search space: a call with a different
     candidate set must re-tune, not inherit another sweep's winner. The
     coupled field set's staggering (``field_offsets``) is part of the key:
     two systems with the same field count but different VMEM footprints
-    tune independently."""
+    tune independently. ``prune`` tags an analytic-pruning configuration
+    (hardware name + ratio) — a pruned search must not inherit an
+    unpruned sweep's winner or vice versa."""
     return (tag, tuple(int(s) for s in shape), jnp.dtype(dtype).name,
             int(radius), int(n_fields),
             tuple(int(k) for k in nsteps_candidates),
@@ -110,7 +116,8 @@ def cache_key(shape, dtype, radius: int, n_fields: int, tag: str = "",
                                              for t in tiles),
             int(vmem_budget),
             None if field_offsets is None else tuple(
-                tuple(int(o) for o in off) for off in field_offsets))
+                tuple(int(o) for o in off) for off in field_offsets),
+            prune)
 
 
 def autotune(
@@ -128,6 +135,9 @@ def autotune(
     tag: str = "",
     cache_path: str | None = None,
     field_offsets: Sequence[Sequence[int]] | None = None,
+    cost_model=None,
+    hw=None,
+    prune_ratio: float = 2.0,
 ) -> TuneResult:
     """Find the fastest (tile, nsteps) for a stencil problem class.
 
@@ -140,9 +150,20 @@ def autotune(
     For coupled systems pass ``field_offsets`` (one per-axis staggering
     tuple per field): the candidate filter and derived tiles then budget
     VMEM for the *sum* of all the system's windows, not a single field.
+
+    Analytic pruning: with a ``cost_model`` (``ir.StencilCostModel``, e.g.
+    ``kernel.cost_model(...)``) and ``hw`` (``teff.HardwareSpec``), every
+    candidate gets a predicted per-step time from the kernel's exact
+    flop/byte footprint — fetched-window traffic vs halo-cone recompute —
+    and candidates slower than ``prune_ratio`` times the best prediction
+    are dropped *before anything is built or compiled*. Only the
+    survivors are measured; ``TuneResult.candidates_pruned`` records how
+    many configs never paid a compile.
     """
+    prune_tag = (None if cost_model is None or hw is None
+                 else (getattr(hw, "name", "hw"), float(prune_ratio)))
     key = cache_key(shape, dtype, radius, n_fields, tag, nsteps_candidates,
-                    tiles, vmem_budget, field_offsets)
+                    tiles, vmem_budget, field_offsets, prune_tag)
     if key in _CACHE:
         return _CACHE[key]
     if cache_path and os.path.exists(cache_path):
@@ -160,8 +181,7 @@ def autotune(
     if derived_tiles:
         tiles = tile_candidates(shape, radius, n_fields, itemsize, vmem_budget,
                                 field_offsets=field_offsets)
-    best: TuneResult | None = None
-    tried = 0
+    cands: list[tuple[tuple[int, ...], int]] = []
     for tile in tiles:
         tile = tuple(int(b) for b in tile)
         for k in nsteps_candidates:
@@ -175,18 +195,31 @@ def autotune(
                 if _window_bytes(tile, radius * k, offs,
                                  itemsize) > vmem_budget:
                     continue
-            try:
-                fn = make_step(tile, k)
-                m = teff.measure(fn, iters=iters, warmup=1)
-            except Exception:
-                continue  # candidate not realizable (tile/shape mismatch etc.)
-            tried += 1
-            per_step = m.median_s / k
-            if best is None or per_step < best.per_step_s:
-                best = TuneResult(tile, k, per_step, tried)
+            cands.append((tile, k))
+    pruned = 0
+    if prune_tag is not None and len(cands) > 1:
+        preds = {c: cost_model.predict_per_step_s(c[0], c[1], hw)
+                 for c in cands}
+        best_pred = min(preds.values())
+        survivors = [c for c in cands if preds[c] <= prune_ratio * best_pred]
+        pruned = len(cands) - len(survivors)
+        cands = survivors
+    best: TuneResult | None = None
+    tried = 0
+    for tile, k in cands:
+        try:
+            fn = make_step(tile, k)
+            m = teff.measure(fn, iters=iters, warmup=1)
+        except Exception:
+            continue  # candidate not realizable (tile/shape mismatch etc.)
+        tried += 1
+        per_step = m.median_s / k
+        if best is None or per_step < best.per_step_s:
+            best = TuneResult(tile, k, per_step, tried)
     if best is None:
         raise RuntimeError("no autotune candidate was runnable")
-    best = dataclasses.replace(best, candidates_tried=tried)
+    best = dataclasses.replace(best, candidates_tried=tried,
+                               candidates_pruned=pruned)
     _CACHE[key] = best
     if cache_path:
         disk = _load_cache(cache_path) if os.path.exists(cache_path) else {}
@@ -202,12 +235,16 @@ def autotune_diffusion3d(
     nsteps_candidates: Sequence[int] = (1, 2, 4),
     iters: int = 5,
     cache_path: str | None = None,
+    hw=None,
+    prune_ratio: float = 2.0,
 ) -> TuneResult:
     """Tune the Fig. 1 diffusion solver on this host.
 
     Uses the ``StencilKernel`` path (jit'd ``run_steps``) so the measured
     configuration is exactly what the solver runs. The jnp backend is the
     performance path on CPU hosts; on TPU pass ``backend="pallas"``.
+    With ``hw`` (a ``teff.HardwareSpec``) the kernel's inferred cost model
+    prunes the candidate grid analytically before anything compiles.
     """
     import jax
     import numpy as np
@@ -229,15 +266,23 @@ def autotune_diffusion3d(
         _, base = _stencil.derive_launch(shape, 1, 3, dtype.itemsize)
         tiles = [base]
 
-    def make_step(tile, k):
-        ps = init_parallel_stencil(backend=backend, dtype=dtype, ndims=3)
-
+    def _kernel(ps, tile=None):
         @ps.parallel(outputs=("T2",), tile=tile, rotations={"T2": "T"})
         def kern(T2, T, Ci, lam, dt, _dx, _dy, _dz):
             return {"T2": fd.inn(T) + dt * (lam * fd.inn(Ci) * (
                 fd.d2_xi(T) * _dx ** 2 + fd.d2_yi(T) * _dy ** 2 +
                 fd.d2_zi(T) * _dz ** 2))}
+        return kern
 
+    cost_model = None
+    if hw is not None:
+        cost_model = _kernel(
+            init_parallel_stencil(backend=backend, dtype=dtype, ndims=3)
+        ).cost_model(T2=shape, T=shape, Ci=shape, **sc)
+
+    def make_step(tile, k):
+        ps = init_parallel_stencil(backend=backend, dtype=dtype, ndims=3)
+        kern = _kernel(ps, tile)
         step = jax.jit(lambda T2, T: kern.run_steps(k, T2=T2, T=T, Ci=Ci, **sc))
         return lambda: step(T2, T)
 
@@ -245,6 +290,7 @@ def autotune_diffusion3d(
         make_step, shape=shape, dtype=dtype, radius=1, n_fields=3,
         nsteps_candidates=nsteps_candidates, tiles=tiles, iters=iters,
         tag=f"diffusion3d/{backend}", cache_path=cache_path,
+        cost_model=cost_model, hw=hw, prune_ratio=prune_ratio,
     )
 
 

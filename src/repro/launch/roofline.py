@@ -156,6 +156,43 @@ def analyze(cost: dict, coll: CollectiveStats, n_devices: int,
                     useful_ratio=(mf / flops if flops else 0.0))
 
 
+def stencil_roofline(cost_model, nsteps: int = 1, hw=None,
+                     measured_s: float | None = None) -> dict:
+    """Roofline position of one fused stencil launch from its analytic
+    cost model (``ir.StencilCostModel`` — exact flops/bytes traced from
+    the kernel source, no hand counting).
+
+    Returns a JSON-able record: arithmetic intensity vs the hardware
+    ridge, the memory/compute time bounds, which one dominates, and —
+    when a measured per-step time is supplied — the achieved fraction of
+    the dominant bound.
+    """
+    peak_flops = getattr(hw, "peak_flops", PEAK_FLOPS)
+    peak_bw = getattr(hw, "peak_bw", HBM_BW)
+    flops = float(cost_model.flops.total())
+    bytes_step = float(cost_model.a_eff_bytes(nsteps))
+    intensity = flops / bytes_step if bytes_step else 0.0
+    ridge = peak_flops / peak_bw
+    t_c = flops / peak_flops
+    t_m = bytes_step / peak_bw
+    bound = max(t_c, t_m)
+    rec = {
+        "flops_per_step": flops,
+        "bytes_per_step": bytes_step,
+        "intensity_flop_per_byte": intensity,
+        "ridge_flop_per_byte": ridge,
+        "t_compute_s": t_c,
+        "t_memory_s": t_m,
+        "dominant": "compute" if t_c >= t_m else "memory",
+        "nsteps": nsteps,
+        "flop_counts": cost_model.flops.to_dict(),
+    }
+    if measured_s is not None and measured_s > 0:
+        rec["measured_s"] = float(measured_s)
+        rec["frac_of_roofline"] = bound / measured_s
+    return rec
+
+
 def analyze_walk(mc, n_devices: int, model_flops_global: float = 0.0,
                  link_bw: float = LINK_BW) -> Roofline:
     """Roofline terms from a trip-count-aware hlo_analysis.Cost walk."""

@@ -1,0 +1,67 @@
+"""CI smoke: inferred footprints reproduce the declared geometry of every
+existing kernel family — diffusion3d (r=1), Gross-Pitaevskii fused (r=2),
+porosity flux-split (staggered face offsets, one-sided halos).
+
+    PYTHONPATH=src:. python tests/ir_smoke.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                ".."))
+
+from repro.core import init_parallel_stencil, fd3d as fd  # noqa: E402
+
+
+def main():
+    from examples import gross_pitaevskii as gp
+    from examples import porosity_waves as pw
+
+    # Fig. 1 diffusion: r = 1, symmetric
+    ps = init_parallel_stencil(ndims=3)
+
+    @ps.parallel(outputs=("T2",))
+    def diff(T2, T, Ci, lam, dt, _dx, _dy, _dz):
+        return {"T2": fd.inn(T) + dt * (lam * fd.inn(Ci) * (
+            fd.d2_xi(T) * _dx ** 2 + fd.d2_yi(T) * _dy ** 2 +
+            fd.d2_zi(T) * _dz ** 2))}
+
+    s = (16, 16, 16)
+    ir = diff.stencil_ir(T2=s, T=s, Ci=s, lam=1.0, dt=1.0,
+                         _dx=1.0, _dy=1.0, _dz=1.0)
+    assert ir.inferred_radius == 1, ir.halo
+    assert ir.halo == ((1, 1),) * 3, ir.halo
+    print(f"diffusion3d: inferred r={ir.inferred_radius} halo={ir.halo}")
+
+    # Gross-Pitaevskii fused coupled kernel: r = 2
+    cfg = gp.GPConfig(n=12)
+    grid, re, im, V = gp.init_state(cfg)
+    kern = gp.make_step(grid, cfg).kernels[0]
+    ir = kern.stencil_ir(re2=re, im2=im, re=re, im=im, V=V, g=cfg.g,
+                         dt=0.1, _dx2=1.0, _dy2=1.0, _dz2=1.0)
+    assert ir.inferred_radius == 2, ir.halo
+    assert ir.halo == ((2, 2),) * 3, ir.halo
+    print(f"gross-pitaevskii fused: inferred r={ir.inferred_radius} "
+          f"halo={ir.halo} field depths im={ir.field_halo['im']} "
+          f"re={ir.field_halo['re']}")
+
+    # porosity flux-split: staggered face offsets + one-sided halos
+    pcfg = pw.PorosityConfig(n=24, flux_split=True)
+    fluxes, update = pw.make_step(pw.make_grid(pcfg), pcfg).kernels
+    n = pcfg.n
+    ir = fluxes.stencil_ir(qx=(n - 1, n), qy=(n, n - 1), phi=(n, n),
+                           Pe=(n, n))
+    assert ir.offsets["qx"] == (1, 0) and ir.offsets["qy"] == (0, 1), ir.offsets
+    assert ir.halo == ((0, 1), (0, 1)), ir.halo
+    ir_u = update.stencil_ir(phi2=(n, n), Pe2=(n, n), phi=(n, n), Pe=(n, n),
+                             qx=(n - 1, n), qy=(n, n - 1), dtau=0.0)
+    assert ir_u.inferred_radius == 1, ir_u.halo
+    print(f"porosity flux-split: offsets qx={ir.offsets['qx']} "
+          f"qy={ir.offsets['qy']} halo={ir.halo}")
+    print("IR smoke: inferred footprints reproduce all declared geometry")
+
+
+if __name__ == "__main__":
+    main()

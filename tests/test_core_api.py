@@ -66,6 +66,51 @@ def test_boundary_conditions(rng):
     np.testing.assert_array_equal(np.asarray(p[:, -1]), np.asarray(p[:, 1]))
 
 
+def test_boundary_depth2_dirichlet(rng):
+    A = jnp.asarray(rng.rand(8, 9), jnp.float32)
+    d = np.asarray(boundary.dirichlet(A, 7.0, depth=2))
+    assert (d[:2] == 7.0).all() and (d[-2:] == 7.0).all()
+    assert (d[:, :2] == 7.0).all() and (d[:, -2:] == 7.0).all()
+    # interior untouched
+    np.testing.assert_array_equal(d[2:-2, 2:-2], np.asarray(A)[2:-2, 2:-2])
+
+
+def test_boundary_depth2_neumann0(rng):
+    A = jnp.asarray(rng.rand(8, 9), jnp.float32)
+    n = np.asarray(boundary.neumann0(A, axes=(0,), depth=2))
+    # both face layers copy the matching interior source layers
+    np.testing.assert_array_equal(n[0], n[2])
+    np.testing.assert_array_equal(n[1], n[3])
+    np.testing.assert_array_equal(n[-1], n[-3])
+    np.testing.assert_array_equal(n[-2], n[-4])
+    np.testing.assert_array_equal(n[2:-2], np.asarray(A)[2:-2])
+
+
+def test_boundary_depth2_periodic(rng):
+    A = jnp.asarray(rng.rand(9, 8), jnp.float32)
+    p = np.asarray(boundary.periodic(A, axes=(0,), depth=2))
+    a = np.asarray(A)
+    # low ghosts mirror the far interior, high ghosts the near interior
+    np.testing.assert_array_equal(p[0:2], a[-4:-2])
+    np.testing.assert_array_equal(p[-2:], a[2:4])
+    np.testing.assert_array_equal(p[2:-2], a[2:-2])
+
+
+def test_boundary_face_smaller_than_depth_raises(rng):
+    A = jnp.asarray(rng.rand(5, 12), jnp.float32)
+    with pytest.raises(ValueError, match="smaller than"):
+        boundary.dirichlet(A, 0.0, axes=(0,), depth=3)   # 5 < 2*3
+    with pytest.raises(ValueError, match="smaller than"):
+        boundary.neumann0(A, axes=(0,), depth=2)         # 5 < 3*2
+    with pytest.raises(ValueError, match="smaller than"):
+        boundary.periodic(A, axes=(0,), depth=2)
+    with pytest.raises(ValueError, match="depth must be"):
+        boundary.neumann0(A, axes=(1,), depth=0)
+    # the depth that *does* fit still works on the same array
+    boundary.dirichlet(A, 0.0, axes=(0,), depth=2)
+    boundary.neumann0(A, axes=(1,), depth=4)
+
+
 def test_teff_accounting():
     a = teff.a_eff(n_points=512 ** 3, n_read=2, n_write=1, itemsize=4)
     assert a == 3 * 512 ** 3 * 4

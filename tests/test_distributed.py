@@ -373,3 +373,56 @@ assert d == 0.0, d
 print("COUPLED_OVERLAP_OK", d)
 """)
     assert "COUPLED_OVERLAP_OK" in out
+
+
+def test_exchange_depths_tighten_traffic():
+    """Footprint-tightened exchange: refreshing only each field's
+    inferred per-axis/per-side read depth yields kernel results identical
+    to the full-radius exchange on the owned cells (the unread outer
+    ghost layers may stay stale — the stencil never touches them)."""
+    out = run_subprocess("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
+from repro.core import init_parallel_stencil
+from repro.distributed import halo, overlap
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((4,), ("x",))
+rng = np.random.RandomState(0)
+R = 2                        # allocated ghost width
+ls = (16 + 2 * R, 12)
+U = jnp.asarray(rng.rand(4, *ls), jnp.float32)
+
+ps = init_parallel_stencil(backend="jnp", ndims=2)
+@ps.parallel(outputs=("U2",))
+def kern(U2, U, dt):
+    # one-sided in x: reads only U[i-2..i] -> depth (2, 0) on x
+    return {"U2": U[2:-2, 1:-1] + dt * (U[:-4, 1:-1] - U[2:-2, 1:-1])}
+
+ir = kern.stencil_ir(U2=ls, U=ls, dt=0.0)
+assert ir.field_halo["U"] == ((2, 0), (0, 0)), ir.field_halo
+sc = dict(dt=1e-3)
+
+def f(Ul):
+    Ul = Ul[0]
+    full = halo.exchange_many(dict(U=Ul), ("U",), ("x",), radius=R)
+    tight = halo.exchange_many(dict(U=Ul), ("U",), ("x",), radius=R,
+                               depths={"U": ir.field_halo["U"][:1]})
+    a = kern(U2=full["U"], U=full["U"], **sc)
+    b = kern(U2=tight["U"], U=tight["U"], **sc)
+    # owned cells (inside the ghost ring) must agree exactly
+    d = jnp.max(jnp.abs(a[R:-R] - b[R:-R]))
+    # sequential_step picks the tightened depths up automatically
+    seq_full, _ = overlap.sequential_step(kern, dict(U2=Ul, U=Ul), sc,
+                                          ("U",), ("x",))
+    d2 = jnp.max(jnp.abs(a[R:-R] - seq_full[R:-R]))
+    return jnp.maximum(d, d2)[None]
+
+g = shard_map(f, mesh=mesh, in_specs=(P("x"),), out_specs=P("x"),
+              check_vma=False)
+d = float(np.max(np.asarray(g(U))))
+assert d == 0.0, d
+print("DEPTHS_OK", d)
+""")
+    assert "DEPTHS_OK" in out

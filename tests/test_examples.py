@@ -98,8 +98,90 @@ def test_gp_fused_kernel_run_steps_bitwise(backend):
     np.testing.assert_array_equal(np.asarray(got["im2"]), np.asarray(ia))
 
 
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("bc", ["neumann", "dirichlet", "periodic"])
+def test_porosity_fused_bc_matches_postpass(backend, bc):
+    """The --bc path (engine-fused boundary conditions) must equal the
+    raw @inn kernel followed by the core.boundary post-pass: bitwise on
+    jnp (identical program); to 1 ulp on pallas, where the bc and no-bc
+    variants are two separately compiled programs whose interior
+    arithmetic may contract FMAs differently (the per-kind bitwise
+    in-program equality is covered in test_ir.py)."""
+    from repro.core import boundary
+
+    cfg_bc = pw.PorosityConfig(n=24, nt=6, backend=backend, bc=bc)
+    cfg_raw = pw.PorosityConfig(n=24, nt=6, backend=backend, bc="none")
+    grid, phi, Pe = pw.init_state(cfg_bc)
+    dtau = pw.timestep(cfg_bc, grid)
+    step_bc = pw.make_step(grid, cfg_bc)
+    step_raw = pw.make_step(grid, cfg_raw)
+    post = {
+        "neumann": boundary.neumann0,
+        "dirichlet": lambda a, v: boundary.dirichlet(a, v),
+        "periodic": boundary.periodic,
+    }
+    p1, e1 = phi, Pe
+    p2, e2 = phi, Pe
+    for _ in range(cfg_bc.nt):
+        p1, e1 = step_bc(p1, e1, dtau)
+        rp, re_ = step_raw(p2, e2, dtau)
+        if bc == "dirichlet":
+            p2, e2 = post[bc](rp, cfg_bc.phi0), post[bc](re_, 0.0)
+        else:
+            p2, e2 = post[bc](rp), post[bc](re_)
+    if backend == "jnp":
+        np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+        np.testing.assert_array_equal(np.asarray(e1), np.asarray(e2))
+    else:
+        np.testing.assert_allclose(np.asarray(p1), np.asarray(p2),
+                                   rtol=1e-5, atol=1e-12)
+        np.testing.assert_allclose(np.asarray(e1), np.asarray(e2),
+                                   rtol=1e-5, atol=1e-12)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_porosity_flux_split_bc_parity(backend):
+    """The fused-BC path composes with the staggered flux-split scheme."""
+    fused = pw.solve(pw.PorosityConfig(n=24, nt=8, backend=backend,
+                                       bc="dirichlet"))
+    split = pw.solve(pw.PorosityConfig(n=24, nt=8, backend=backend,
+                                       bc="dirichlet", flux_split=True))
+    np.testing.assert_allclose(np.asarray(fused["phi"]),
+                               np.asarray(split["phi"]), atol=1e-7)
+
+
+@pytest.mark.parametrize("bc", ["neumann", "dirichlet", "periodic"])
+def test_gp_fused_bc_matches_postpass(bc):
+    """GP --bc routed through the fused coupled kernel == raw kernel +
+    post-pass (jnp backend; pallas parity is covered per-kind in
+    test_ir.py)."""
+    from repro.core import boundary
+
+    cfg_bc = gp.GPConfig(n=12, nt=4, bc=bc)
+    cfg_raw = gp.GPConfig(n=12, nt=4, bc="none")
+    grid, re, im, V = gp.init_state(cfg_bc)
+    dt = gp.timestep(grid)
+    step_bc = gp.make_step(grid, cfg_bc)
+    step_raw = gp.make_step(grid, cfg_raw)
+    post = {"neumann": boundary.neumann0,
+            "dirichlet": lambda a: boundary.dirichlet(a, 0.0),
+            "periodic": boundary.periodic}[bc]
+    r1, i1 = re, im
+    r2, i2 = re, im
+    for _ in range(cfg_bc.nt):
+        r1, i1 = step_bc(r1, i1, dt, V)
+        rr, ri = step_raw(r2, i2, dt, V)
+        r2, i2 = post(rr), post(ri)
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
 def test_cli_main_smoke(capsys):
     pw.main(["--n", "32", "--nt", "3"])
     assert "porosity wave" in capsys.readouterr().out
+    pw.main(["--n", "32", "--nt", "3", "--bc", "periodic"])
+    assert "bc=periodic" in capsys.readouterr().out
     gp.main(["--n", "12", "--nt", "2"])
+    assert "GP:" in capsys.readouterr().out
+    gp.main(["--n", "12", "--nt", "2", "--bc", "dirichlet"])
     assert "GP:" in capsys.readouterr().out
