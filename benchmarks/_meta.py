@@ -7,6 +7,7 @@ trajectory stays attributable across machines and commits.
 from __future__ import annotations
 
 import os
+import platform
 import subprocess
 import time
 
@@ -40,6 +41,10 @@ def bench_meta() -> dict:
         "jaxlib_version": jaxlib_version,
         "backend": jax.default_backend(),
         "device": str(jax.devices()[0]) if jax.devices() else None,
+        # host identity: wall-time comparisons across machines are
+        # meaningless — benchmarks/compare.py refuses them on mismatch
+        "hostname": platform.node() or None,
+        "cpu_count": os.cpu_count(),
         "git_sha": git_sha(),
         "timestamp_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
     }

@@ -172,7 +172,40 @@ def _fused_vs_sequential(kern, fields, scalars, nsteps, iters):
     }
 
 
-def bench_porosity_coupled(n: int = 64, iters: int = 10, nsteps: int = 4):
+def _march_rows(kern, fields, scalars, march_axis: int, iters: int):
+    """Streamed-vs-all-parallel record for one coupled kernel: per-step
+    medians on both backends through ``kern.marched`` plus a parity check
+    against the all-parallel jnp step (CI compiles the streamed path for
+    every solver this way)."""
+    import numpy as np
+
+    out = {"axis": march_axis}
+    ref = kern.marched(None)(**fields, **scalars)
+    names = tuple(fields)
+    arrs = tuple(fields[n] for n in names)
+    for backend in ("jnp", "pallas"):
+        k = kern if kern.ps.backend == backend else None
+        if k is None:
+            from repro.core import init_parallel_stencil
+            ps = init_parallel_stencil(backend=backend, ndims=kern.ps.ndims,
+                                       dtype=kern.ps.dtype)
+            k = ps.parallel(outputs=kern.outputs, tile=kern.tile,
+                            rotations=kern.rotations, bc=kern.bc)(kern.fn)
+        m = k.marched(march_axis)
+        # field arrays as jit *arguments* — a zero-arg closure would let
+        # XLA constant-fold the whole chain and time a no-op
+        step = jax.jit(lambda *a, m=m: m(**dict(zip(names, a)), **scalars))
+        meas = teff.measure(lambda: step(*arrs), iters=iters, warmup=2)
+        out[f"{backend}_us"] = meas.median_s * 1e6
+        got = step(*arrs)
+        for o in kern.outputs:
+            np.testing.assert_allclose(np.asarray(got[o]), np.asarray(ref[o]),
+                                       atol=1e-5)
+    return out
+
+
+def bench_porosity_coupled(n: int = 64, iters: int = 10, nsteps: int = 4,
+                           march_axis: int | None = None):
     """Reactive porosity waves through the coupled (phi, Pe) engine."""
     from examples import porosity_waves as pw
 
@@ -196,10 +229,15 @@ def bench_porosity_coupled(n: int = 64, iters: int = 10, nsteps: int = 4):
     rows["temporal"] = _fused_vs_sequential(
         kern, dict(phi2=phi, Pe2=Pe, phi=phi, Pe=Pe),
         dict(dtau=pw.timestep(cfg, grid)), nsteps, iters)
+    if march_axis is not None:
+        rows["march"] = _march_rows(
+            kern, dict(phi2=phi, Pe2=Pe, phi=phi, Pe=Pe),
+            dict(dtau=pw.timestep(cfg, grid)), march_axis, iters)
     return rows
 
 
-def bench_gp_coupled(n: int = 32, iters: int = 10, nsteps: int = 2):
+def bench_gp_coupled(n: int = 32, iters: int = 10, nsteps: int = 2,
+                     march_axis: int | None = None):
     """Gross-Pitaevskii through the fused coupled radius-2 kernel, plus
     the one-fused-launch vs two-launch comparison."""
     from examples import gross_pitaevskii as gp
@@ -231,6 +269,11 @@ def bench_gp_coupled(n: int = 32, iters: int = 10, nsteps: int = 2):
         kern, dict(re2=re, im2=im, re=re, im=im, V=V),
         dict(g=cfg.g, dt=dt, _dx2=inv2[0], _dy2=inv2[1], _dz2=inv2[2]),
         nsteps, iters)
+    if march_axis is not None:
+        rows["march"] = _march_rows(
+            kern, dict(re2=re, im2=im, re=re, im=im, V=V),
+            dict(g=cfg.g, dt=dt, _dx2=inv2[0], _dy2=inv2[1], _dz2=inv2[2]),
+            march_axis, iters)
     return rows
 
 
@@ -246,6 +289,9 @@ def main(argv=None):
                     help="output path (default BENCH_solvers_p{N}_g{N}.json)")
     ap.add_argument("--skip-coupled", action="store_true",
                     help="translation-efficiency table only, no JSON")
+    ap.add_argument("--march-axis", type=int, default=None,
+                    help="also time the streamed (marching) coupled step "
+                         "on both backends and check parity")
     args = ap.parse_args(argv)
     n_diff, n_gp_tr, tr_iters = 96, 48, 10
     if args.quick:
@@ -264,17 +310,25 @@ def main(argv=None):
     if args.skip_coupled:
         return record
 
-    p = bench_porosity_coupled(args.n_porosity, args.iters, args.nsteps)
+    p = bench_porosity_coupled(args.n_porosity, args.iters, args.nsteps,
+                               march_axis=args.march_axis)
     print(f"solvers_porosity_coupled_{p['n']},{p['jnp_us']:.1f},"
           f"pallas/jnp={p['pallas_over_jnp']:.2f}")
     print(f"solvers_porosity_fused_k{p['temporal']['nsteps']},"
           f"{p['temporal']['fused_per_step_us']:.1f},"
           f"speedup={p['temporal']['fused_speedup']:.2f}")
-    gc = bench_gp_coupled(args.n_gp, args.iters, max(2, args.nsteps // 2))
+    if "march" in p:
+        print(f"solvers_porosity_march{p['march']['axis']},"
+              f"{p['march']['jnp_us']:.1f},us")
+    gc = bench_gp_coupled(args.n_gp, args.iters, max(2, args.nsteps // 2),
+                          march_axis=args.march_axis)
     print(f"solvers_gp_coupled_{gc['n']},{gc['jnp_us']:.1f},"
           f"pallas/jnp={gc['pallas_over_jnp']:.2f}")
     print(f"solvers_gp_fused_vs_two_launch,{gc['jnp_us']:.1f},"
           f"ratio={gc['fused_over_two_launch']:.2f}")
+    if "march" in gc:
+        print(f"solvers_gp_march{gc['march']['axis']},"
+              f"{gc['march']['jnp_us']:.1f},us")
     record["porosity_coupled"] = p
     record["gp_coupled"] = gc
 

@@ -1,0 +1,135 @@
+"""Perf-regression guard over the BENCH_teff_*.json trajectory.
+
+The benchmark records were append-only JSON with no reader; this closes
+the loop: the newest record's rows are diffed against the most recent
+older record that shares the same row key (``name``, grid size ``n``,
+``nsteps``) and a compatible ``_meta.py`` stamp (same jax backend — a
+CPU record is never judged against a TPU one), and any per-step-time
+regression beyond the threshold fails the run.
+
+    PYTHONPATH=src python benchmarks/compare.py            # scan cwd
+    PYTHONPATH=src python benchmarks/compare.py OLD NEW    # explicit pair
+    ... [--threshold 0.15] [--dir PATH] [--pattern GLOB]
+
+Records written before the provenance stamp existed (no ``meta`` block)
+sort as oldest and are only used as baselines, with a warning. Exit
+status: 1 on any regression beyond threshold, else 0 ("no comparable
+rows" is a clean pass — a fresh machine has no trajectory yet).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        d = json.load(f)
+    d["_path"] = path
+    return d
+
+
+def row_key(row: dict) -> tuple:
+    return (row.get("name"), row.get("n"), row.get("nsteps"))
+
+
+SKIP_SUBSTRINGS = ("broadcast",)   # unjitted didactic baselines: pure noise
+
+
+def record_rows(rec: dict) -> dict:
+    return {row_key(r): r for r in rec.get("rows", [])
+            if "per_step_s" in r
+            and not any(s in str(r.get("name")) for s in SKIP_SUBSTRINGS)}
+
+
+def meta_compatible(old: dict, new: dict) -> tuple[bool, str]:
+    mo, mn = old.get("meta"), new.get("meta")
+    if mo is None:
+        return True, "baseline predates provenance stamps; comparing anyway"
+    if mo.get("backend") != (mn or {}).get("backend"):
+        return False, (f"backend mismatch ({mo.get('backend')} vs "
+                       f"{(mn or {}).get('backend')})")
+    ho, hn = mo.get("hostname"), (mn or {}).get("hostname")
+    if ho and hn and ho != hn:
+        # wall-time deltas across machines are not regressions
+        return False, f"different hosts ({ho} vs {hn})"
+    note = ""
+    if mo.get("jax_version") != (mn or {}).get("jax_version"):
+        note = (f"jax {mo.get('jax_version')} -> "
+                f"{(mn or {}).get('jax_version')}")
+    return True, note
+
+
+def sort_stamp(rec: dict) -> str:
+    # records without a meta block predate the stamp: sort oldest
+    return (rec.get("meta") or {}).get("timestamp_utc", "")
+
+
+def compare(old: dict, new: dict, threshold: float) -> list[str]:
+    """Regression lines (empty = pass) for rows shared by two records."""
+    ok, note = meta_compatible(old, new)
+    if not ok:
+        print(f"# skip {old['_path']} vs {new['_path']}: {note}")
+        return []
+    if note:
+        print(f"# note: {note}")
+    failures = []
+    orows, nrows = record_rows(old), record_rows(new)
+    for key in sorted(set(orows) & set(nrows), key=str):
+        t_old = float(orows[key]["per_step_s"])
+        t_new = float(nrows[key]["per_step_s"])
+        ratio = t_new / t_old if t_old else float("inf")
+        status = "OK" if ratio <= 1.0 + threshold else "REGRESSION"
+        print(f"{status} {key}: {t_old*1e6:.1f}us -> {t_new*1e6:.1f}us "
+              f"({ratio:.2f}x)")
+        if status != "OK":
+            failures.append(f"{key}: {ratio:.2f}x slower "
+                            f"({old['_path']} -> {new['_path']})")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*",
+                    help="explicit OLD NEW pair; default scans --dir")
+    ap.add_argument("--dir", default=".")
+    ap.add_argument("--pattern", default="BENCH_teff*.json")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="allowed per-step slowdown fraction (default 15%%)")
+    args = ap.parse_args(argv)
+
+    if args.files:
+        if len(args.files) != 2:
+            ap.error("pass exactly two files (OLD NEW) or none")
+        failures = compare(load(args.files[0]), load(args.files[1]),
+                           args.threshold)
+    else:
+        paths = sorted(glob.glob(os.path.join(args.dir, args.pattern)))
+        recs = sorted((load(p) for p in paths), key=sort_stamp)
+        if len(recs) < 2:
+            print(f"# {len(recs)} record(s) matching {args.pattern!r} in "
+                  f"{args.dir!r}: nothing to compare")
+            return 0
+        newest = recs[-1]
+        failures = []
+        # walk older records newest-first until one shares a row key
+        for old in reversed(recs[:-1]):
+            if set(record_rows(old)) & set(record_rows(newest)):
+                failures = compare(old, newest, args.threshold)
+                break
+        else:
+            print("# no older record shares a row key with "
+                  f"{newest['_path']}: nothing to compare")
+    if failures:
+        print("\nFAIL: per-step regression beyond "
+              f"{args.threshold:.0%}:\n  " + "\n  ".join(failures))
+        return 1
+    print("# perf trajectory OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

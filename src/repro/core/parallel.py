@@ -93,6 +93,7 @@ class ParallelStencil:
         vmem_budget: int = _stencil.DEFAULT_VMEM_BUDGET,
         rotations: Mapping[str, str] | None = None,
         bc: Mapping[str, Any] | None = None,
+        march_axis: int | None = None,
     ) -> Callable[[Callable], "StencilKernel"]:
         """``radius`` is optional: the stencil IR infers per-field,
         per-axis footprints from the update function itself; declaring it
@@ -101,10 +102,19 @@ class ParallelStencil:
         field to the input field it becomes on the next time step (e.g.
         ``{"T2": "T"}``) — required for the temporally-blocked
         ``run_steps(k>1)`` path. ``bc`` declares per-output boundary
-        conditions fused into the engine's step."""
+        conditions fused into the engine's step. ``march_axis`` turns one
+        grid axis into a sequential *streaming* dimension: the pallas
+        backend slides per-field VMEM plane queues along it instead of
+        refetching overlapping halo windows, the jnp backend realizes the
+        same marching order as a scan over plane slabs (cache-resident
+        working set). Streamed results equal the all-parallel path."""
+        if march_axis is not None and not 0 <= int(march_axis) < self.ndims:
+            raise ValueError(
+                f"march_axis {march_axis} out of range for ndims={self.ndims}")
+
         def deco(fn: Callable) -> StencilKernel:
             return StencilKernel(self, fn, tuple(outputs), radius, tile,
-                                 vmem_budget, rotations, bc)
+                                 vmem_budget, rotations, bc, march_axis)
 
         return deco
 
@@ -137,7 +147,8 @@ class StencilKernel:
     def __init__(self, ps: ParallelStencil, fn: Callable, outputs: tuple[str, ...],
                  radius: int | None, tile, vmem_budget: int,
                  rotations: Mapping[str, str] | None = None,
-                 bc: Mapping[str, Any] | None = None):
+                 bc: Mapping[str, Any] | None = None,
+                 march_axis: int | None = None):
         self.ps = ps
         self.fn = fn
         self.outputs = outputs
@@ -146,9 +157,31 @@ class StencilKernel:
         self.vmem_budget = vmem_budget
         self.rotations = dict(rotations) if rotations else None
         self.bc = _ir.bc.normalize_bcs(bc, outputs, ps.ndims)
+        self.march_axis = None if march_axis is None else int(march_axis)
         self._cache: dict = {}
         self._geom_cache: dict = {}
+        self._march_variants: dict = {}
         functools.update_wrapper(self, fn)
+
+    def marched(self, march_axis: int | None) -> "StencilKernel":
+        """A variant of this kernel streaming along ``march_axis``
+        (``None`` returns the all-parallel variant). Variants are
+        memoized on the parent so repeated calls — e.g. the distributed
+        overlap path marching its interior every step — reuse one
+        compile cache."""
+        if march_axis is not None and not 0 <= int(march_axis) < self.ps.ndims:
+            raise ValueError(
+                f"march_axis {march_axis} out of range for "
+                f"ndims={self.ps.ndims}")
+        if march_axis == self.march_axis:
+            return self
+        v = self._march_variants.get(march_axis)
+        if v is None:
+            v = StencilKernel(self.ps, self.fn, self.outputs, self.radius,
+                              self.tile, self.vmem_budget, self.rotations,
+                              self.bc, march_axis)
+            self._march_variants[march_axis] = v
+        return v
 
     # -- argument classification ------------------------------------------
     def _split(self, kwargs: Mapping[str, Any]):
@@ -283,10 +316,138 @@ class StencilKernel:
             out[name] = res
         return out
 
+    def _march_write_geometry(self, fields, scalars, base, geom):
+        """Per-output (modes, rings, off) from an abstract trace (no
+        compute), plus the staggered-march validation shared with the
+        pallas path."""
+        march = self.march_axis
+        upd_shapes = jax.eval_shape(
+            lambda f, s: self.fn(**f, **s), dict(fields), dict(scalars))
+        ring_pin = self.radius if geom.ir is None else None
+        out = {}
+        for o in self.outputs:
+            prev_shape = tuple(fields[o].shape)
+            off = tuple(b - s for b, s in zip(base, prev_shape))
+            modes, rings = _stencil.write_geometry(
+                tuple(upd_shapes[o].shape), prev_shape, off, o, ring_pin)
+            out[o] = (modes, rings, off)
+        for n, v in fields.items():
+            if base[march] - v.shape[march]:
+                raise ValueError(
+                    f"march_axis {march} points at a staggered axis: field "
+                    f"{n!r} has offset {base[march] - v.shape[march]} there "
+                    "— streaming slides collocated planes; stagger a "
+                    "non-marching axis or drop march_axis"
+                )
+        return out
+
+    def _run_jnp_march(self, fields, scalars, base, geom: KernelGeometry):
+        """Marching realization of the jnp backend: a ``lax.scan`` slides
+        plane slabs along ``march_axis`` in block steps, so the working
+        set per step is a few planes per field (cache-resident — the CPU
+        analogue of the pallas path's VMEM plane queue) instead of the
+        whole arrays. Results equal :meth:`_run_jnp` (1-ulp across the
+        two separately compiled programs)."""
+        march = self.march_axis
+        nd = self.ps.ndims
+        geometry = self._march_write_geometry(fields, scalars, base, geom)
+        n_march = base[march]
+        halos = geom.halos if geom.halos is not None \
+            else ((self.radius, self.radius),) * nd
+        lo_m, hi_m = halos[march]
+        ring_max = max(rings[march] for _, rings, _ in geometry.values())
+        e_lo, e_hi = max(lo_m, ring_max), max(hi_m, ring_max)
+        bm = max((d for d in range(1, min(4, n_march) + 1)
+                  if n_march % d == 0), default=1)
+        slab = bm + e_lo + e_hi
+        if slab > n_march:
+            # march extent smaller than one slab: marching degenerates —
+            # run the all-parallel realization (identical semantics).
+            return self._run_jnp(fields, scalars, base, geom)
+        nb = n_march // bm
+        dtype = self.ps.dtype
+
+        def block_at(i):
+            sc = jnp.clip(i * bm - e_lo, 0, n_march - slab)
+            slabs = {n: jax.lax.dynamic_slice_in_dim(v, sc, slab, axis=march)
+                     for n, v in fields.items()}
+            updates = self.fn(**slabs, **scalars)
+            outs = []
+            for o in self.outputs:
+                modes, rings, off = geometry[o]
+                upd = updates[o].astype(dtype)
+                w_m = rings[march]
+                # Update index u holds the update of global plane
+                # sc + u + w_m; block positions g in [i*bm, i*bm + bm)
+                # live at u = g - sc - w_m. Out-of-range u (zero pad)
+                # only lands on march-ring planes, masked below.
+                # Tight placement pad: slice start (i*bm - sc) ranges over
+                # [0, e_lo + e_hi] on an update of extent
+                # bm + e_lo + e_hi - 2*w_m, so w_m zeros per side cover
+                # every clamped position (zeros land only on ring planes,
+                # blended below).
+                pad = [(0, 0)] * nd
+                pad[march] = (w_m, w_m)
+                blk = jax.lax.dynamic_slice_in_dim(
+                    jnp.pad(upd, pad) if w_m else upd, i * bm - sc, bm,
+                    axis=march)
+                prev = jax.lax.dynamic_slice_in_dim(
+                    fields[o], i * bm, bm, axis=march)
+                # Wrap each `inn` axis with the prev block's thin boundary
+                # strips (concat assembly — the one block-sized
+                # materialization per output; a copy-then-scatter or a
+                # post-scan patch both cost extra whole-array passes):
+                # when wrapping axis a, axes already wrapped are at full
+                # extent, axes still pending stay at their interior
+                # extents.
+                done = set()
+                for a in range(nd - 1, -1, -1):
+                    if a == march or modes[a] == "all" or not rings[a]:
+                        done.add(a)
+                        continue
+                    w = rings[a]
+
+                    def strip(side, a=a, w=w, done=frozenset(done)):
+                        idx = []
+                        for b_ax in range(nd):
+                            n_b = prev.shape[b_ax]
+                            if b_ax == a:
+                                idx.append(slice(0, w) if side == 0
+                                           else slice(n_b - w, n_b))
+                            elif b_ax in done or b_ax == march:
+                                idx.append(slice(None))
+                            else:
+                                wb = rings[b_ax]
+                                idx.append(slice(wb, n_b - wb))
+                        return prev[tuple(idx)]
+
+                    blk = jnp.concatenate([strip(0), blk, strip(1)], axis=a)
+                    done.add(a)
+                if modes[march] == "inn" and w_m:
+                    g = i * bm + jnp.arange(bm)
+                    keep = (g < w_m) | (g >= n_march - w_m)
+                    keep = keep.reshape(tuple(bm if a == march else 1
+                                              for a in range(nd)))
+                    blk = jnp.where(keep, prev, blk)
+                outs.append(blk)
+            return tuple(outs)
+
+        _, stacked = jax.lax.scan(lambda c, i: (c, block_at(i)), 0,
+                                  jnp.arange(nb))
+        out = {}
+        for o, ys in zip(self.outputs, stacked):
+            arr = jnp.moveaxis(ys, 0, march)
+            arr = arr.reshape(fields[o].shape)
+            cond = self.bc.get(o)
+            if cond is not None:
+                arr = cond.apply(arr)
+            out[o] = arr
+        return out
+
     def _run_pallas(self, fields, scalars, base, shapes,
                     geom: KernelGeometry, nsteps: int = 1):
         key = (base, tuple(sorted(shapes.items())), tuple(sorted(scalars)),
-               nsteps)
+               nsteps, self.march_axis)
         run = self._cache.get(key)
         if run is None:
             field_names = tuple(fields)
@@ -311,6 +472,11 @@ class StencilKernel:
                 field_shapes=shapes,
                 halos=geom.halos,
                 bc=self.bc,
+                march_axis=self.march_axis,
+                write_rings=None if geom.ir is None else tuple(
+                    max(rings[a] for rings in geom.ir.write_rings.values())
+                    for a in range(self.ps.ndims)
+                ),
             )
             self._cache[key] = run
         return run(fields, scalars)
@@ -320,6 +486,8 @@ class StencilKernel:
         geom = self._geometry(base, shapes, tuple(scalars))
         if self.ps.backend == "pallas":
             outs = self._run_pallas(fields, scalars, base, shapes, geom)
+        elif self.march_axis is not None:
+            outs = self._run_jnp_march(fields, scalars, base, geom)
         else:
             outs = self._run_jnp(fields, scalars, base, geom)
         if len(self.outputs) == 1:
@@ -370,10 +538,14 @@ class StencilKernel:
             # sweeps later — under jit XLA turns those scatters into
             # in-place updates instead of per-launch copies. (Also the
             # pallas realization when a periodic bc forbids in-window
-            # temporal blocking.)
-            step = (self._run_jnp if self.ps.backend == "jnp"
-                    else lambda f, s, b, g: self._run_pallas(f, s, b,
-                                                             shapes, g))
+            # temporal blocking.) A marching jnp kernel unrolls marched
+            # single steps — each sweep streams its slabs in order.
+            if self.ps.backend == "jnp":
+                step = (self._run_jnp_march if self.march_axis is not None
+                        else self._run_jnp)
+            else:
+                step = lambda f, s, b, g: self._run_pallas(f, s, b,  # noqa: E731
+                                                           shapes, g)
             cur = dict(fields)
             for s in range(nsteps):
                 outs = step(cur, scalars, base, geom)

@@ -63,6 +63,39 @@ def a_eff_blocked(n_points: int, n_read: int, n_write: int, itemsize: int,
     return a_eff(n_points, n_read, n_write, itemsize) / max(int(nsteps), 1)
 
 
+def window_overlap_factor(block, halo, nsteps: int = 1,
+                          march_axis: int | None = None) -> float:
+    """Read-amplification of a tiled launch vs ideal once-per-sweep
+    streaming: ``prod_a (b_a + k*(lo_a + hi_a)) / b_a`` over the axes
+    whose windows overlap. The all-parallel launch refetches along every
+    axis; a streamed launch (``march_axis``) carries its march-axis halo
+    planes in on-chip scratch, so that axis drops out of the product —
+    which is exactly the traffic the marching mode saves."""
+    k = max(int(nsteps), 1)
+    block = tuple(int(b) for b in block)
+    if isinstance(halo, int):
+        halo = ((halo, halo),) * len(block)
+    f = 1.0
+    for a, (b, (lo, hi)) in enumerate(zip(block, halo)):
+        if march_axis is not None and a == march_axis:
+            continue
+        f *= (b + k * (lo + hi)) / b
+    return f
+
+
+def a_eff_streamed(n_points: int, n_read: int, n_write: int, itemsize: int,
+                   nsteps: int = 1, overlap: float = 1.0) -> float:
+    """Per-step HBM traffic of a streamed (marching) launch: each read
+    field is fetched ~once per sweep times the residual window-overlap
+    factor of the non-marching axes (``window_overlap_factor`` with the
+    march axis excluded; 1.0 = perfect reuse), writes stream out once,
+    and a k-fused launch amortizes both over k steps. The refetched
+    all-parallel traffic is the same formula with the full overlap
+    factor — the difference is what ``march_axis=`` eliminates."""
+    return ((n_read * overlap + n_write) * n_points * itemsize
+            / max(int(nsteps), 1))
+
+
 def halo_compute_overhead(block, radius: int, nsteps: int) -> float:
     """Fraction of *redundant* gridpoint-updates a k-fused launch performs
     relative to k ideal sweeps over the block.

@@ -138,6 +138,7 @@ def overlapped_step(
     exchange: Sequence[str],
     mesh_axes: Sequence[str],
     periodic=False,
+    march_axis: int | None = None,
 ):
     """@hide_communication: bulk update overlaps the halo ppermutes.
 
@@ -146,6 +147,12 @@ def overlapped_step(
     the same overlapped pass (the halo group travels in one round-trip);
     the return mirrors the kernel's call convention — a bare array for
     single-output kernels, an out-name dict for coupled systems.
+
+    ``march_axis`` streams the *interior* (bulk) update — the big launch
+    whose windows dominate the rank's HBM traffic — through the engine's
+    marching mode (``kernel.marched``); the per-face shell re-updates
+    stay all-parallel: their slabs are a few cells thick, thinner than a
+    plane queue, so the streamed builder would fall back anyway.
     """
     r, _, ir = _kernel_geometry(kernel, fields, scalars, exchange,
                                 mesh_axes)
@@ -175,7 +182,10 @@ def overlapped_step(
     fresh = _halo.exchange_many(fields, exchange, mesh_axes, radius=r, periodic=periodic)
 
     # 2) bulk update with stale halos — correct except the shell ring
-    bulk = as_dict(kernel(**fields, **scalars))
+    #    (streamed along march_axis when requested: the interior tiles
+    #    reuse their plane queues instead of refetching halo windows)
+    bulk_kernel = kernel if march_axis is None else kernel.marched(march_axis)
+    bulk = as_dict(bulk_kernel(**fields, **scalars))
 
     # 3) recompute the shell per face from fresh slabs and paste. The
     #    slab must contain the shell's reads (support) and its writes

@@ -141,30 +141,75 @@ class StencilCostModel:
         bytes_ = self.read_bytes + self.write_bytes
         return self.flops.total() / bytes_ if bytes_ else 0.0
 
-    def fetched_bytes_per_step(self, tile: Sequence[int], nsteps: int) -> float:
+    def fetched_bytes_per_step(self, tile: Sequence[int], nsteps: int,
+                               march_axis: int | None = None) -> float:
         """HBM bytes actually moved per time step by the tiled launch:
         every block fetches its (overlapping) halo-extended windows and
         writes its output block; a k-fused launch amortizes both over k
         steps. This is the footprint-aware refinement of ``a_eff`` that
-        makes small tiles with deep halos look as expensive as they are."""
+        makes small tiles with deep halos look as expensive as they are.
+
+        With ``march_axis`` the launch streams: windows overlap only on
+        the *non*-marching axes — along the march axis each tile column
+        fetches every plane once (plus ``Lhi`` clamped drain blocks), the
+        halo planes riding in the scratch queue instead of being
+        refetched. This is the model that makes temporal blocking and
+        streaming composable in the autotuner: deep ``k*r`` halos stop
+        multiplying the traffic along the marched axis."""
         k = max(int(nsteps), 1)
         tile = tuple(int(b) for b in tile)
-        n_blocks = math.prod(-(-s // b) for s, b in zip(self.shape, tile))
+        nd = len(tile)
+        offs = self.field_offsets or ((0,) * nd,)
+        if march_axis is None:
+            n_blocks = math.prod(-(-s // b) for s, b in zip(self.shape, tile))
+            win = sum(
+                math.prod(b + k * (lo + hi) - o
+                          for b, (lo, hi), o in zip(tile, self.halo, off))
+                for off in offs
+            ) * self.itemsize
+            return (n_blocks * win + self.write_bytes) / k
+        m = int(march_axis)
+        bm = tile[m]
+        lhi = -(-k * self.halo[m][1] // bm)
+        planes = self.shape[m] + lhi * bm      # fetch steps * bm per column
+        n_cols = math.prod(-(-s // b) for a, (s, b)
+                           in enumerate(zip(self.shape, tile)) if a != m)
         win = sum(
-            math.prod(b + k * (lo + hi) - o
-                      for b, (lo, hi), o in zip(tile, self.halo, off))
-            for off in (self.field_offsets or ((0,) * len(tile),))
+            planes * math.prod(
+                tile[a] + k * (self.halo[a][0] + self.halo[a][1]) - off[a]
+                for a in range(nd) if a != m)
+            for off in offs
         ) * self.itemsize
-        return (n_blocks * win + self.write_bytes) / k
+        return (n_cols * win + self.write_bytes) / k
+
+    def a_eff_streamed(self, tile: Sequence[int], nsteps: int = 1,
+                       march_axis: int = 0) -> float:
+        """Analytic per-step HBM traffic of the *streamed* launch — the
+        ``a_eff``-style number the roofline records report next to the
+        ideal (:meth:`a_eff_bytes`) and the refetched all-parallel
+        traffic (:meth:`fetched_bytes_per_step` without a march axis).
+        Equals ``fetched_bytes_per_step(tile, nsteps, march_axis)``;
+        named for the T_eff table column it fills. ``march_axis`` must
+        name a real axis: for a launch that fell back to all-parallel
+        (``run.march_axis is None``) use ``fetched_bytes_per_step`` —
+        returning refetched traffic under this name would corrupt any
+        table built from it."""
+        if march_axis is None:
+            raise ValueError(
+                "a_eff_streamed needs a concrete march_axis; an all-"
+                "parallel launch's traffic is fetched_bytes_per_step(...)"
+            )
+        return self.fetched_bytes_per_step(tile, nsteps, march_axis)
 
     def predict_per_step_s(self, tile: Sequence[int], nsteps: int,
-                           hw) -> float:
-        """Roofline-style per-step runtime prediction for one (tile, k)
-        candidate on ``hw`` (a ``teff.HardwareSpec``): max of the memory
-        term (fetched windows) and the compute term inflated by the
-        redundant halo-cone work of temporal blocking."""
+                           hw, march_axis: int | None = None) -> float:
+        """Roofline-style per-step runtime prediction for one
+        (tile, k, march_axis) candidate on ``hw`` (a ``teff.HardwareSpec``):
+        max of the memory term (fetched windows — streamed traffic when
+        marching) and the compute term inflated by the redundant
+        halo-cone work of temporal blocking."""
         k = max(int(nsteps), 1)
-        t_mem = self.fetched_bytes_per_step(tile, k) / hw.peak_bw
+        t_mem = self.fetched_bytes_per_step(tile, k, march_axis) / hw.peak_bw
         overhead = halo_compute_overhead(tile, self.halo, k)
         t_comp = self.flops.total() * (1.0 + overhead) / hw.peak_flops
         return max(t_mem, t_comp)

@@ -35,21 +35,31 @@ class TuneResult:
     per_step_s: float
     candidates_tried: int
     candidates_pruned: int = 0   # dropped by the analytic model pre-compile
+    march_axis: int | None = None  # winning streaming axis (None: all-parallel)
 
     def to_json(self) -> dict:
         return {"tile": list(self.tile), "nsteps": self.nsteps,
                 "per_step_s": self.per_step_s,
                 "candidates_tried": self.candidates_tried,
-                "candidates_pruned": self.candidates_pruned}
+                "candidates_pruned": self.candidates_pruned,
+                "march_axis": self.march_axis}
 
     @classmethod
     def from_json(cls, d: dict) -> "TuneResult":
+        march = d.get("march_axis")
         return cls(tuple(d["tile"]), int(d["nsteps"]), float(d["per_step_s"]),
                    int(d.get("candidates_tried", 0)),
-                   int(d.get("candidates_pruned", 0)))
+                   int(d.get("candidates_pruned", 0)),
+                   None if march is None else int(march))
 
 
 _CACHE: dict[tuple, TuneResult] = {}
+
+# Persistent-cache schema version. v2 adds the engine-geometry fields
+# (march axis candidates, per-axis halos) to the key: launches cached by
+# older binaries may be invalid for the streamed geometry, so files
+# without a matching version are IGNORED (re-tuned), never trusted.
+CACHE_VERSION = 2
 
 
 def _divisors(n: int) -> list[int]:
@@ -101,14 +111,20 @@ def cache_key(shape, dtype, radius: int, n_fields: int, tag: str = "",
               nsteps_candidates: Sequence[int] = (),
               tiles=None, vmem_budget: int = 0,
               field_offsets: Sequence[Sequence[int]] | None = None,
-              prune: tuple | None = None) -> tuple:
+              prune: tuple | None = None,
+              march_candidates: Sequence[int | None] | None = None,
+              halos: Sequence[tuple[int, int]] | None = None) -> tuple:
     """Memo key covers the full search space: a call with a different
     candidate set must re-tune, not inherit another sweep's winner. The
     coupled field set's staggering (``field_offsets``) is part of the key:
     two systems with the same field count but different VMEM footprints
     tune independently. ``prune`` tags an analytic-pruning configuration
     (hardware name + ratio) — a pruned search must not inherit an
-    unpruned sweep's winner or vice versa."""
+    unpruned sweep's winner or vice versa. The engine-geometry fields —
+    ``march_candidates`` (streaming axes in the search space) and
+    ``halos`` (per-axis (lo, hi) window depths) — key the launch
+    geometry itself: a winner tuned for refetched halo windows must not
+    be handed to a streamed-queue launch or vice versa."""
     return (tag, tuple(int(s) for s in shape), jnp.dtype(dtype).name,
             int(radius), int(n_fields),
             tuple(int(k) for k in nsteps_candidates),
@@ -117,7 +133,11 @@ def cache_key(shape, dtype, radius: int, n_fields: int, tag: str = "",
             int(vmem_budget),
             None if field_offsets is None else tuple(
                 tuple(int(o) for o in off) for off in field_offsets),
-            prune)
+            prune,
+            None if march_candidates is None else tuple(
+                None if m is None else int(m) for m in march_candidates),
+            None if halos is None else tuple(
+                (int(lo), int(hi)) for lo, hi in halos))
 
 
 def autotune(
@@ -138,14 +158,23 @@ def autotune(
     cost_model=None,
     hw=None,
     prune_ratio: float = 2.0,
+    march_candidates: Sequence[int | None] | None = None,
+    halos: Sequence[tuple[int, int]] | None = None,
 ) -> TuneResult:
-    """Find the fastest (tile, nsteps) for a stencil problem class.
+    """Find the fastest (tile, nsteps[, march_axis]) for a stencil
+    problem class.
 
     ``make_step(tile, nsteps)`` must return a zero-arg callable advancing
     ``nsteps`` time steps with that configuration (typically a jit'd
     ``StencilKernel.run_steps`` closure). Per-step median wall time decides.
     Results are memoized per (shape, dtype, radius, field set, tag) in
     process memory and, when ``cache_path`` is given, in a JSON file.
+
+    ``march_candidates`` adds the streaming axis to the search space
+    (e.g. ``(None, 0)``: all-parallel vs marching the leading axis);
+    ``make_step`` is then called as ``make_step(tile, nsteps,
+    march_axis)``. ``halos`` (per-axis (lo, hi) depths, e.g. the traced
+    ``ir.halo``) keys the cached winner to the launch geometry.
 
     For coupled systems pass ``field_offsets`` (one per-axis staggering
     tuple per field): the candidate filter and derived tiles then budget
@@ -163,7 +192,8 @@ def autotune(
     prune_tag = (None if cost_model is None or hw is None
                  else (getattr(hw, "name", "hw"), float(prune_ratio)))
     key = cache_key(shape, dtype, radius, n_fields, tag, nsteps_candidates,
-                    tiles, vmem_budget, field_offsets, prune_tag)
+                    tiles, vmem_budget, field_offsets, prune_tag,
+                    march_candidates, halos)
     if key in _CACHE:
         return _CACHE[key]
     if cache_path and os.path.exists(cache_path):
@@ -181,24 +211,34 @@ def autotune(
     if derived_tiles:
         tiles = tile_candidates(shape, radius, n_fields, itemsize, vmem_budget,
                                 field_offsets=field_offsets)
-    cands: list[tuple[tuple[int, ...], int]] = []
+    pass_march = march_candidates is not None
+    marches = (None,) if march_candidates is None else tuple(march_candidates)
+    cands: list[tuple[tuple[int, ...], int, int | None]] = []
     for tile in tiles:
         tile = tuple(int(b) for b in tile)
         for k in nsteps_candidates:
             k = int(k)
-            if derived_tiles:
-                # Temporal blocking widens the halo to k*radius; enforce the
-                # VMEM budget at the depth actually being measured, summed
-                # over the full coupled field set.
-                # (Explicitly-passed tiles bypass this: the caller may be
-                # tuning a backend where the budget is irrelevant, e.g. jnp.)
-                if _window_bytes(tile, radius * k, offs,
-                                 itemsize) > vmem_budget:
-                    continue
-            cands.append((tile, k))
+            for march in marches:
+                if derived_tiles:
+                    # Temporal blocking widens the halo to k*radius; enforce
+                    # the VMEM budget at the depth actually being measured,
+                    # summed over the full coupled field set — streamed
+                    # candidates are costed with their plane queues instead
+                    # of march-axis halos.
+                    # (Explicitly-passed tiles bypass this: the caller may
+                    # be tuning a backend where the budget is irrelevant,
+                    # e.g. jnp.)
+                    if march is None:
+                        wb = _window_bytes(tile, radius * k, offs, itemsize)
+                    else:
+                        wb = _stencil.streamed_footprint_bytes(
+                            tile, radius * k, offs, itemsize, march)
+                    if wb > vmem_budget:
+                        continue
+                cands.append((tile, k, march))
     pruned = 0
     if prune_tag is not None and len(cands) > 1:
-        preds = {c: cost_model.predict_per_step_s(c[0], c[1], hw)
+        preds = {c: cost_model.predict_per_step_s(c[0], c[1], hw, c[2])
                  for c in cands}
         best_pred = min(preds.values())
         survivors = [c for c in cands if preds[c] <= prune_ratio * best_pred]
@@ -206,16 +246,17 @@ def autotune(
         cands = survivors
     best: TuneResult | None = None
     tried = 0
-    for tile, k in cands:
+    for tile, k, march in cands:
         try:
-            fn = make_step(tile, k)
+            fn = make_step(tile, k, march) if pass_march else \
+                make_step(tile, k)
             m = teff.measure(fn, iters=iters, warmup=1)
         except Exception:
             continue  # candidate not realizable (tile/shape mismatch etc.)
         tried += 1
         per_step = m.median_s / k
         if best is None or per_step < best.per_step_s:
-            best = TuneResult(tile, k, per_step, tried)
+            best = TuneResult(tile, k, per_step, tried, march_axis=march)
     if best is None:
         raise RuntimeError("no autotune candidate was runnable")
     best = dataclasses.replace(best, candidates_tried=tried,
@@ -237,6 +278,7 @@ def autotune_diffusion3d(
     cache_path: str | None = None,
     hw=None,
     prune_ratio: float = 2.0,
+    march_candidates: Sequence[int | None] | None = None,
 ) -> TuneResult:
     """Tune the Fig. 1 diffusion solver on this host.
 
@@ -245,6 +287,8 @@ def autotune_diffusion3d(
     performance path on CPU hosts; on TPU pass ``backend="pallas"``.
     With ``hw`` (a ``teff.HardwareSpec``) the kernel's inferred cost model
     prunes the candidate grid analytically before anything compiles.
+    ``march_candidates`` (e.g. ``(None, 0)``) adds streamed execution to
+    the search space.
     """
     import jax
     import numpy as np
@@ -266,23 +310,25 @@ def autotune_diffusion3d(
         _, base = _stencil.derive_launch(shape, 1, 3, dtype.itemsize)
         tiles = [base]
 
-    def _kernel(ps, tile=None):
-        @ps.parallel(outputs=("T2",), tile=tile, rotations={"T2": "T"})
+    def _kernel(ps, tile=None, march=None):
+        @ps.parallel(outputs=("T2",), tile=tile, rotations={"T2": "T"},
+                     march_axis=march)
         def kern(T2, T, Ci, lam, dt, _dx, _dy, _dz):
             return {"T2": fd.inn(T) + dt * (lam * fd.inn(Ci) * (
                 fd.d2_xi(T) * _dx ** 2 + fd.d2_yi(T) * _dy ** 2 +
                 fd.d2_zi(T) * _dz ** 2))}
         return kern
 
+    probe = _kernel(init_parallel_stencil(backend=backend, dtype=dtype,
+                                          ndims=3))
+    halos = probe.stencil_ir(T2=shape, T=shape, Ci=shape, **sc).halo
     cost_model = None
     if hw is not None:
-        cost_model = _kernel(
-            init_parallel_stencil(backend=backend, dtype=dtype, ndims=3)
-        ).cost_model(T2=shape, T=shape, Ci=shape, **sc)
+        cost_model = probe.cost_model(T2=shape, T=shape, Ci=shape, **sc)
 
-    def make_step(tile, k):
+    def make_step(tile, k, march=None):
         ps = init_parallel_stencil(backend=backend, dtype=dtype, ndims=3)
-        kern = _kernel(ps, tile)
+        kern = _kernel(ps, tile, march)
         step = jax.jit(lambda T2, T: kern.run_steps(k, T2=T2, T=T, Ci=Ci, **sc))
         return lambda: step(T2, T)
 
@@ -291,6 +337,7 @@ def autotune_diffusion3d(
         nsteps_candidates=nsteps_candidates, tiles=tiles, iters=iters,
         tag=f"diffusion3d/{backend}", cache_path=cache_path,
         cost_model=cost_model, hw=hw, prune_ratio=prune_ratio,
+        march_candidates=march_candidates, halos=halos,
     )
 
 
@@ -300,16 +347,25 @@ def _key_str(key: tuple) -> str:
 
 
 def _load_cache(path: str) -> dict[str, TuneResult]:
+    """Load a persistent cache, IGNORING (not crashing on) files written
+    by older schema versions: PR 1–3 binaries cached launches without the
+    march/halos geometry in the key, so their winners may be invalid for
+    the streamed engine — a version mismatch simply re-tunes."""
     try:
         with open(path) as f:
             raw = json.load(f)
-        return {k: TuneResult.from_json(v) for k, v in raw.items()}
-    except (OSError, ValueError, KeyError):
+        if not isinstance(raw, dict) or raw.get("version") != CACHE_VERSION:
+            return {}
+        return {k: TuneResult.from_json(v)
+                for k, v in raw.get("entries", {}).items()}
+    except (OSError, ValueError, KeyError, TypeError):
         return {}
 
 
 def _save_cache(path: str, cache: dict[str, TuneResult]) -> None:
     tmp = path + ".tmp"
     with open(tmp, "w") as f:
-        json.dump({k: v.to_json() for k, v in cache.items()}, f, indent=1)
+        json.dump({"version": CACHE_VERSION,
+                   "entries": {k: v.to_json() for k, v in cache.items()}},
+                  f, indent=1)
     os.replace(tmp, path)

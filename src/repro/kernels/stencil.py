@@ -126,6 +126,48 @@ def window_footprint_bytes(
     ) * itemsize
 
 
+def march_queue_blocks(block_m: int, halo_m: tuple[int, int]) -> tuple[int, int, int]:
+    """Rolling plane-queue geometry of a streamed (marching) launch along
+    one axis: ``halo_m`` is the *total* (lo, hi) window halo along the
+    march axis (single-sweep depths times ``nsteps``), ``block_m`` the
+    march-axis block extent.  Returns ``(Q, Llo, Lhi)``: the queue depth
+    in blocks and the low/high lookbehind/lookahead in blocks.  The queue
+    holds ``Q * block_m`` planes — ``2*halo + support`` rounded up to
+    block multiples — and the output lags the fetch by ``Lhi`` blocks
+    (the drain/priming offset of the software pipeline)."""
+    k_lo, k_hi = int(halo_m[0]), int(halo_m[1])
+    bm = int(block_m)
+    llo = -(-k_lo // bm)
+    lhi = -(-k_hi // bm)
+    return llo + 1 + lhi, llo, lhi
+
+
+def streamed_footprint_bytes(
+    block: Sequence[int],
+    halo,
+    field_offsets: Sequence[Sequence[int]],
+    itemsize: int,
+    march_axis: int,
+) -> int:
+    """VMEM bytes of a *streamed* launch: per field, the fetch window
+    carries no halo along the march axis (new planes only — the reuse
+    that kills the refetch) plus the rolling plane queue of
+    ``Q * block_m`` planes carried in scratch across grid steps."""
+    block = tuple(int(b) for b in block)
+    nd = len(block)
+    pairs = _halo_pairs(halo, nd)
+    m = march_axis
+    q, _, _ = march_queue_blocks(block[m], pairs[m])
+    total = 0
+    for off in field_offsets:
+        other = [block[a] + pairs[a][0] + pairs[a][1] - off[a]
+                 for a in range(nd) if a != m]
+        area = math.prod(other) if other else 1
+        total += (block[m] - off[m]) * area          # fetch window
+        total += q * block[m] * area                 # scratch plane queue
+    return total * itemsize
+
+
 def derive_launch(
     shape: Sequence[int],
     radius: int,
@@ -136,6 +178,8 @@ def derive_launch(
     nsteps: int = 1,
     field_offsets: Sequence[Sequence[int]] | None = None,
     halos: Sequence[tuple[int, int]] | None = None,
+    march_axis: int | None = None,
+    march_min_block: int = 1,
 ) -> tuple[tuple[int, ...], tuple[int, ...]]:
     """Derive (grid, block_shape) from array bounds — ParallelStencil's
     automatic launch-parameter derivation, with TPU tiling constraints.
@@ -157,6 +201,11 @@ def derive_launch(
     base window extent); when present the VMEM footprint is the *sum of
     the per-field windows*, so a system with many fields gets smaller
     blocks than a single-field problem under the same budget.
+
+    ``march_axis`` switches the VMEM accounting to the streamed launch
+    geometry: the march axis carries no window halo (blocks fetch new
+    planes only) but each field adds a rolling plane queue of
+    ``Q * block_m`` planes held in scratch across grid steps.
     """
     shape = tuple(int(s) for s in shape)
     nd = len(shape)
@@ -170,6 +219,9 @@ def derive_launch(
     field_offsets = [tuple(int(o) for o in off) for off in field_offsets]
 
     def window_bytes(blk):
+        if march_axis is not None:
+            return streamed_footprint_bytes(blk, halo, field_offsets,
+                                            itemsize, march_axis)
         return window_footprint_bytes(blk, halo, field_offsets, itemsize)
 
     if tile is not None:
@@ -182,6 +234,17 @@ def derive_launch(
         block = [
             _pick_block(s, c, al) for s, c, al in zip(shape, caps, aligns)
         ]
+        if march_axis is not None:
+            # The march block should be *small*: each sequential grid
+            # step fetches bm fresh planes, and the pipeline's drain
+            # refetches up to one block per column — so bm beyond the
+            # halo depth only inflates the queue and the drain traffic,
+            # while a halo-sized bm keeps both at O(halo). The innermost
+            # two axes keep their lane/sublane-aligned tiles.
+            m = march_axis
+            need = max(halo[m][0], halo[m][1], 1, int(march_min_block))
+            fit = [d for d in _divisors_leq(shape[m], shape[m]) if d >= need]
+            block[m] = fit[0] if fit else shape[m]
 
         # Shrink the largest non-minor axis first; keep lane alignment longest.
         while window_bytes(block) > vmem_budget:
@@ -227,15 +290,21 @@ def halo_window_spec(
     return pl.BlockSpec(win, index_map, indexing_mode=pl.Unblocked(halo))
 
 
-def compiler_params(nd: int):
-    """All-parallel ``dimension_semantics`` for an nd stencil grid (every
-    block is independent), letting Mosaic pipeline block revisits. Returns
-    None when this jax has no TPU compiler-params surface."""
+def compiler_params(nd: int, march: bool = False):
+    """``dimension_semantics`` for an nd stencil grid. All-parallel by
+    default (every block independent, letting Mosaic pipeline block
+    revisits); with ``march=True`` the innermost (last) grid dimension is
+    ``"arbitrary"`` — executed sequentially so the scratch plane queue
+    carries state from one grid step to the next — while the leading tile
+    dimensions stay ``"parallel"`` (Megacore may still split them).
+    Returns None when this jax has no TPU compiler-params surface."""
     cp = getattr(pltpu, "CompilerParams", None) or getattr(
         pltpu, "TPUCompilerParams", None
     )
     if cp is None:
         return None
+    if march:
+        return cp(dimension_semantics=("parallel",) * (nd - 1) + ("arbitrary",))
     return cp(dimension_semantics=("parallel",) * nd)
 
 
@@ -333,7 +402,7 @@ def _write_modes(
     return modes
 
 
-def _valid_mask(block, field_shape, off, rings, modes, ext):
+def _valid_mask(block, field_shape, off, rings, modes, ext, pids=None):
     """Mask of the cells this block may write for one output field, on
     the frame ``[pid*block - ext_lo, pid*block + block + ext_hi - off)``
     per axis (``ext``: per-axis (lo, hi) frame extensions; zeros with
@@ -343,6 +412,11 @@ def _valid_mask(block, field_shape, off, rings, modes, ext):
     ``inn`` axes accept the field's global interior at that axis's ring
     depth; ``all`` axes accept every in-domain cell (OOB cells beyond a
     staggered field's extent stay masked and are cropped by the caller).
+
+    ``pids`` supplies per-axis logical block ids when they differ from
+    the raw grid position — the streamed path's march axis writes block
+    ``i - Lhi`` while fetching block ``i``. ``None`` reads
+    ``pl.program_id`` per axis (grid in array-axis order).
     """
     nd = len(block)
     ext = _halo_pairs(ext, nd)
@@ -350,7 +424,7 @@ def _valid_mask(block, field_shape, off, rings, modes, ext):
                    for b, (lo, hi), o in zip(block, ext, off))
     m = None
     for a in range(nd):
-        pid = pl.program_id(a)
+        pid = pl.program_id(a) if pids is None else pids[a]
         g = pid * block[a] - ext[a][0] + jax.lax.broadcasted_iota(
             jnp.int32, mshape, a)
         if modes[a] == "inn":
@@ -404,7 +478,7 @@ def _shift(a, axis: int, d: int):
     return jnp.pad(a[tuple(idx)], pad)
 
 
-def _apply_bc_frame(arr, bc, field_shape, block, ext, dtype):
+def _apply_bc_frame(arr, bc, field_shape, block, ext, dtype, pids=None):
     """Realize one output's dirichlet/neumann0 condition on a block frame
     ``[pid*block - ext_lo, pid*block + block + ext_hi - off)`` (``arr``'s
     own shape), bitwise-equal to the ``core.boundary`` post-pass.
@@ -414,7 +488,9 @@ def _apply_bc_frame(arr, bc, field_shape, block, ext, dtype):
     sequential order as the post-pass (which is what defines the corner
     values). Periodic conditions cannot be realized from local windows
     (their sources live across the domain) and are handled by the caller
-    as a face-slab scatter on the assembled output.
+    as a face-slab scatter on the assembled output. ``pids`` carries
+    per-axis logical block ids when they differ from the grid position
+    (the streamed path); ``None`` reads ``pl.program_id``.
     """
     if bc is None or bc.kind == "periodic":
         return arr
@@ -423,7 +499,8 @@ def _apply_bc_frame(arr, bc, field_shape, block, ext, dtype):
     d = bc.depth
 
     def giota(a):
-        return pl.program_id(a) * block[a] - ext[a][0] + \
+        pid = pl.program_id(a) if pids is None else pids[a]
+        return pid * block[a] - ext[a][0] + \
             jax.lax.broadcasted_iota(jnp.int32, arr.shape, a)
 
     if bc.kind == "dirichlet":
@@ -462,6 +539,8 @@ def build_stencil_call(
     field_shapes: Mapping[str, Sequence[int]] | None = None,
     halos: Sequence[tuple[int, int]] | None = None,
     bc: Mapping[str, object] | None = None,
+    march_axis: int | None = None,
+    write_rings: Sequence[int] | None = None,
 ) -> Callable[..., dict[str, jax.Array]]:
     """Build a fused Pallas stencil step (or a k-step temporal block).
 
@@ -493,6 +572,20 @@ def build_stencil_call(
     field the sweep's output becomes for the next sweep (the in-kernel
     analogue of the solver's ``T, T2 = T2, T`` double-buffer rotation) —
     for coupled systems every output rotates simultaneously.
+
+    Streaming (``march_axis=a``): axis ``a`` becomes a *sequential* grid
+    dimension (innermost, ``dimension_semantics`` "arbitrary") that the
+    launch marches block-by-block. Each grid step fetches only the NEW
+    planes of every field (the march-axis window carries no halo) and
+    pushes them into a rolling plane queue held in VMEM scratch across
+    grid steps; the halo-extended march window is then assembled from
+    the queue, so each input element crosses HBM ~once per sweep instead
+    of once per overlapping tile. The output lags the fetch by ``Lhi``
+    blocks (priming steps write block 0 and are overwritten; ``Lhi``
+    drain steps flush the tail), which is transparent to the caller.
+    Fields staggered along the march axis are unsupported (ValueError);
+    a march extent smaller than the queue falls back to the all-parallel
+    path (``run.march_fallback``).
     """
     shape = tuple(int(s) for s in shape)
     nd = len(shape)
@@ -547,14 +640,62 @@ def build_stencil_call(
     # Per-axis single-sweep halo depths: the declared radius (symmetric)
     # or the inferred footprint (possibly asymmetric / zero per axis).
     sweep_halo = _halo_pairs(radius if halos is None else halos, nd)
+    if write_rings is not None:
+        # The window must cover every block cell *structurally*, not just
+        # its data footprint: an `inn`-written output's update expression
+        # spans window - 2*ring, placed ring cells in — so a side whose
+        # read halo is shallower than the write ring (one-sided/upwind
+        # taps under inn-style slicing) would leave the seam cells of
+        # interior blocks unreachable by any block. Extend each side to
+        # at least the deepest output ring on that axis.
+        sweep_halo = tuple(
+            (max(lo, int(r)), max(hi, int(r)))
+            for (lo, hi), r in zip(sweep_halo, write_rings)
+        )
     ring = radius if halos is None else None  # legacy pins `inn` to radius
-    grid, block = derive_launch(
-        shape, radius, len(field_names), dtype.itemsize, vmem_budget, tile,
-        nsteps=nsteps,
-        field_offsets=[offsets[n] for n in field_names],
-        halos=None if halos is None else sweep_halo,
-    )
+    march = march_axis
+    march_fallback = False
+    if march is not None:
+        march = int(march)
+        if not 0 <= march < nd:
+            raise ValueError(
+                f"march_axis {march} out of range for a {nd}-d stencil")
+        for n in field_names:
+            if offsets[n][march]:
+                raise ValueError(
+                    f"march_axis {march} points at a staggered axis: field "
+                    f"{n!r} has offset {offsets[n][march]} there — streaming "
+                    "slides collocated planes; stagger a non-marching axis "
+                    "or drop march_axis"
+                )
+
+    def _derive(m):
+        # Fused neumann0 conditions copy through frame-local shifts, so
+        # the (small, halo-sized) march block must still hold 2*depth
+        # cells along the marched axis.
+        min_bm = 1
+        if m is not None:
+            for o, c in inkernel_bc.items():
+                if c.kind == "neumann0" and m in c.resolved_axes(nd):
+                    min_bm = max(min_bm, 2 * c.depth + offsets[o][m])
+        return derive_launch(
+            shape, radius, len(field_names), dtype.itemsize, vmem_budget,
+            tile, nsteps=nsteps,
+            field_offsets=[offsets[n] for n in field_names],
+            halos=None if halos is None else sweep_halo,
+            march_axis=m, march_min_block=min_bm,
+        )
+
+    grid, block = _derive(march)
     whalo = tuple((nsteps * lo, nsteps * hi) for lo, hi in sweep_halo)
+    if march is not None:
+        q_blocks, llo_b, lhi_b = march_queue_blocks(block[march], whalo[march])
+        if shape[march] < q_blocks * block[march]:
+            # The march extent cannot even fill the plane queue:
+            # streaming would fetch mostly duplicate planes. Fall back to
+            # the all-parallel launch (identical results, refetched halos).
+            march, march_fallback = None, True
+            grid, block = _derive(None)
     for o, c in inkernel_bc.items():
         if c.kind == "neumann0":
             for a in c.resolved_axes(nd):
@@ -565,11 +706,41 @@ def build_stencil_call(
                         f"{block[a]} (pass a larger tile)"
                     )
 
-    def in_index_map(*pids):
-        return tuple(pid * b for pid, b in zip(pids, block))
+    if march is None:
+        launch_grid = grid
 
-    def out_index_map(*pids):
-        return pids
+        def in_index_map(*pids):
+            return tuple(pid * b for pid, b in zip(pids, block))
+
+        def out_index_map(*pids):
+            return pids
+    else:
+        # Streamed launch: the march axis becomes the innermost (fastest
+        # varying, sequential) grid dimension so consecutive grid steps
+        # walk one tile column plane-block by plane-block and the scratch
+        # queue stays column-coherent. The fetch leads the write by Lhi
+        # blocks (lookahead); `Lhi` extra drain steps flush the tail, and
+        # the fetch map clamps there (duplicate planes stand in for the
+        # out-of-bounds padding of the all-parallel path — both only ever
+        # reach masked boundary-ring cells).
+        others = tuple(a for a in range(nd) if a != march)
+        launch_grid = tuple(grid[a] for a in others) + (grid[march] + lhi_b,)
+
+        def in_index_map(*pids):
+            i = pids[-1]
+            return tuple(
+                jnp.minimum(i, grid[march] - 1) * block[march] if a == march
+                else pids[others.index(a)] * block[a]
+                for a in range(nd)
+            )
+
+        def out_index_map(*pids):
+            i = pids[-1]
+            return tuple(
+                jnp.maximum(i - lhi_b, 0) if a == march
+                else pids[others.index(a)]
+                for a in range(nd)
+            )
 
     n_s, n_f = len(scalar_names), len(field_names)
 
@@ -585,9 +756,45 @@ def build_stencil_call(
     def body(*refs):
         scal_refs = refs[:n_s]
         in_refs = refs[n_s : n_s + n_f]
-        out_refs = refs[n_s + n_f :]
+        out_refs = refs[n_s + n_f : n_s + n_f + len(out_names)]
+        q_refs = refs[n_s + n_f + len(out_names) :]
         scalars = {n: ref[0] for n, ref in zip(scalar_names, scal_refs)}
-        windows = {n: ref[...] for n, ref in zip(field_names, in_refs)}
+        if march is None:
+            pids = None
+            windows = {n: ref[...] for n, ref in zip(field_names, in_refs)}
+        else:
+            i = pl.program_id(nd - 1)
+            pids = tuple(
+                jnp.maximum(i - lhi_b, 0) if a == march
+                else pl.program_id(others.index(a))
+                for a in range(nd)
+            )
+            if q_blocks == 1:
+                # Zero march halo: nothing to carry — the fetched block
+                # IS the window (streaming still sequences the axis).
+                windows = {n: ref[...] for n, ref in zip(field_names,
+                                                         in_refs)}
+            else:
+                # Roll each field's plane queue by one block and append
+                # the newly fetched planes; the halo-extended march window
+                # of the *written* block (o = i - Lhi) is a static slice
+                # of the queue: queue plane q holds global plane
+                # (i - Q + 1)*bm + q.
+                bm = block[march]
+                tail = tuple(slice(bm, None) if a == march else slice(None)
+                             for a in range(nd))
+                qs = llo_b * bm - whalo[march][0]
+                wsl = tuple(
+                    slice(qs, qs + bm + whalo[march][0] + whalo[march][1])
+                    if a == march else slice(None)
+                    for a in range(nd)
+                )
+                windows = {}
+                for n, in_ref, q_ref in zip(field_names, in_refs, q_refs):
+                    q = jnp.concatenate([q_ref[tail], in_ref[...]],
+                                        axis=march)
+                    q_ref[...] = q
+                    windows[n] = q[wsl]
         for s in range(nsteps - 1):
             updates = update_fn(windows, scalars)
             _check_updates(updates)
@@ -609,13 +816,13 @@ def build_stencil_call(
                     updates[o].astype(dtype), frame,
                     tuple(w - lo for w, (lo, _) in zip(rings, sweep_halo)))
                 mask = _valid_mask(block, shapes[o], offsets[o], rings,
-                                   modes, ext)
+                                   modes, ext, pids)
                 # Cells outside the mask (boundary ring of `inn` axes) keep
                 # carrying their previous values; a fused bc then rewrites
                 # that ring exactly like the post-pass would between steps.
                 blended = jnp.where(mask, upd, windows[tgt])
                 blended = _apply_bc_frame(blended, inkernel_bc.get(o),
-                                          shapes[o], block, ext, dtype)
+                                          shapes[o], block, ext, dtype, pids)
                 windows[tgt] = blended
         updates = update_fn(windows, scalars)
         _check_updates(updates)
@@ -629,18 +836,22 @@ def build_stencil_call(
             prev = _embed(windows[o],
                           block, tuple(-lo for lo, _ in sweep_halo))
             mask = _valid_mask(block, shapes[o], (0,) * nd, rings, modes,
-                               (0,) * nd)
+                               (0,) * nd, pids)
             blended = jnp.where(mask, upd, prev)
             blended = _apply_bc_frame(blended, inkernel_bc.get(o),
                                       shapes[o], block, ((0, 0),) * nd,
-                                      dtype)
+                                      dtype, pids)
             oref[...] = blended
 
+    # The march-axis fetch window carries no halo (streaming fetches new
+    # planes only; the halo planes are carried in the scratch queue).
+    field_halo = whalo if march is None else tuple(
+        (0, 0) if a == march else whalo[a] for a in range(nd))
     in_specs = [pl.BlockSpec(memory_space=pltpu.SMEM) for _ in scalar_names]
     in_specs += [
         halo_window_spec(
             tuple(b - o for b, o in zip(block, offsets[n])),
-            whalo,
+            field_halo,
             in_index_map,
         )
         for n in field_names
@@ -651,13 +862,26 @@ def build_stencil_call(
     out_shape = [jax.ShapeDtypeStruct(shape, dtype) for _ in out_names]
 
     kwargs = {}
+    if march is not None and q_blocks > 1:
+        # One rolling plane queue per field, persisted across grid steps
+        # (the march dimension is sequential, so the previous step's
+        # planes are still live when the next block arrives).
+        kwargs["scratch_shapes"] = [
+            pltpu.VMEM(
+                tuple(q_blocks * block[march] if a == march
+                      else block[a] + whalo[a][0] + whalo[a][1] - offsets[n][a]
+                      for a in range(nd)),
+                dtype,
+            )
+            for n in field_names
+        ]
     if not interpret:
-        cp = compiler_params(nd)
+        cp = compiler_params(nd, march=march is not None)
         if cp is not None:
             kwargs["compiler_params"] = cp
     call = pl.pallas_call(
         body,
-        grid=grid,
+        grid=launch_grid,
         in_specs=in_specs,
         out_specs=out_specs[0] if len(out_names) == 1 else out_specs,
         out_shape=out_shape[0] if len(out_names) == 1 else out_shape,
@@ -695,6 +919,14 @@ def build_stencil_call(
     run.nsteps = nsteps
     run.field_shapes = dict(shapes)
     run.halo = sweep_halo
-    run.window_bytes = window_footprint_bytes(
-        block, whalo, [offsets[n] for n in field_names], dtype.itemsize)
+    run.march_axis = march
+    run.march_fallback = march_fallback
+    run.queue_planes = 0 if march is None else q_blocks * block[march]
+    if march is None:
+        run.window_bytes = window_footprint_bytes(
+            block, whalo, [offsets[n] for n in field_names], dtype.itemsize)
+    else:
+        run.window_bytes = streamed_footprint_bytes(
+            block, whalo, [offsets[n] for n in field_names], dtype.itemsize,
+            march)
     return run

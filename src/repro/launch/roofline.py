@@ -157,7 +157,8 @@ def analyze(cost: dict, coll: CollectiveStats, n_devices: int,
 
 
 def stencil_roofline(cost_model, nsteps: int = 1, hw=None,
-                     measured_s: float | None = None) -> dict:
+                     measured_s: float | None = None,
+                     tile=None, march_axis: int | None = None) -> dict:
     """Roofline position of one fused stencil launch from its analytic
     cost model (``ir.StencilCostModel`` — exact flops/bytes traced from
     the kernel source, no hand counting).
@@ -165,7 +166,10 @@ def stencil_roofline(cost_model, nsteps: int = 1, hw=None,
     Returns a JSON-able record: arithmetic intensity vs the hardware
     ridge, the memory/compute time bounds, which one dominates, and —
     when a measured per-step time is supplied — the achieved fraction of
-    the dominant bound.
+    the dominant bound. With a ``tile`` the record also distinguishes the
+    *refetched* traffic of the all-parallel launch from the *streamed*
+    traffic when ``march_axis`` slides that axis sequentially (the bytes
+    the plane queue saves).
     """
     peak_flops = getattr(hw, "peak_flops", PEAK_FLOPS)
     peak_bw = getattr(hw, "peak_bw", HBM_BW)
@@ -187,6 +191,14 @@ def stencil_roofline(cost_model, nsteps: int = 1, hw=None,
         "nsteps": nsteps,
         "flop_counts": cost_model.flops.to_dict(),
     }
+    if tile is not None:
+        rec["tile"] = list(tile)
+        rec["refetched_bytes_per_step"] = float(
+            cost_model.fetched_bytes_per_step(tile, nsteps))
+        if march_axis is not None:
+            rec["march_axis"] = int(march_axis)
+            rec["streamed_bytes_per_step"] = float(
+                cost_model.a_eff_streamed(tile, nsteps, march_axis))
     if measured_s is not None and measured_s > 0:
         rec["measured_s"] = float(measured_s)
         rec["frac_of_roofline"] = bound / measured_s
