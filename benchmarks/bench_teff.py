@@ -214,6 +214,88 @@ def bench_march(cfg: Diffusion3DConfig, march_axis: int, iters: int = 20,
     return rows, speedup, cost
 
 
+def bench_checks(cfg: Diffusion3DConfig, check_every: int, iters: int = 20,
+                 host_bw: float | None = None):
+    """Fused in-launch convergence check vs step + SEPARATE norm pass.
+
+    Both variants advance ``check_every`` steps and produce
+    ``err = max|T2_new - T|`` once per round. The fused variant folds the
+    check inside the same compiled program as the final step (the jnp
+    realization of the Pallas per-tile partials epilogue — XLA fuses the
+    fold into the update loop, so the operands never cross HBM again);
+    the post variant runs the m steps and then a separately compiled
+    whole-array norm pass that re-reads both operand fields — the extra
+    traffic the issue's accounting (``ir.check_io_bytes``) prices.
+    Rounds are interleaved against host throughput drift, as bench_march.
+    """
+    g, T, T2, Ci, dt = _setup(cfg)
+    inv = g.inv_spacing
+    ir, _ = _analytic(cfg.shape)
+    a_eff = teff.a_eff_from_ir(ir, itemsize=4)
+    if host_bw is None:
+        host_bw = teff.measure_host_bandwidth()
+    sc = dict(lam=cfg.lam, dt=dt, _dx=inv[0], _dy=inv[1], _dz=inv[2])
+    m = max(int(check_every), 1)
+
+    kern = _diffusion_kernel(init_parallel_stencil(backend="jnp", ndims=3))
+    rkern = kern.with_reductions({"err": "max_abs_diff(T2, T)"})
+    # check traffic priced off the CHECKED kernel's IR (the plain kernel
+    # declares no reductions, so its check_io_bytes is rightly zero)
+    check_bytes = rkern.stencil_ir(
+        T2=cfg.shape, T=cfg.shape, Ci=cfg.shape, **sc).check_io_bytes(4)
+
+    def fused_chain(a, b):
+        for _ in range(m - 1):
+            out = kern(T2=a, T=b, Ci=Ci, **sc)
+            a, b = b, out
+        out, reds = rkern(T2=a, T=b, Ci=Ci, **sc)
+        return out, reds["err"]
+
+    def plain_chain(a, b):
+        for _ in range(m - 1):
+            out = kern(T2=a, T=b, Ci=Ci, **sc)
+            a, b = b, out
+        out = kern(T2=a, T=b, Ci=Ci, **sc)
+        return out, b  # b: the pre-final-step buffer the norm diffs against
+
+    fused = jax.jit(fused_chain)
+    plain = jax.jit(plain_chain)
+    norm = jax.jit(lambda x, y: jnp.max(jnp.abs(x - y)))
+
+    def post_round():
+        out, prev = plain(T2, T)
+        return norm(out, prev)  # separately compiled pass: re-reads both
+
+    # Interleaved measurement rounds (same rationale as bench_march: this
+    # host's throughput drifts; both variants must see the same noise).
+    rounds = max(iters // 3, 1)
+    f_samples, p_samples = [], []
+    m_f = m_p = None
+    for _ in range(rounds):
+        m_f = teff.measure(lambda: fused(T2, T), iters=3, warmup=1)
+        m_p = teff.measure(post_round, iters=3, warmup=1)
+        f_samples += m_f.samples_s
+        p_samples += m_p.samples_s
+    m_f = dataclasses.replace(m_f, median_s=float(np.median(f_samples)),
+                              samples_s=f_samples)
+    m_p = dataclasses.replace(m_p, median_s=float(np.median(p_samples)),
+                              samples_s=p_samples)
+    # parity: reductions reassociate across programs -> allclose, not ==
+    np.testing.assert_allclose(float(fused(T2, T)[1]),
+                               float(post_round()), rtol=1e-5)
+
+    a_fused = teff.a_eff_checked(a_eff, check_bytes, m, fused=True)
+    a_post = teff.a_eff_checked(a_eff, check_bytes, m, fused=False)
+    rows = [
+        _row(f"fused_check_m{m}", cfg, m_f, a_fused, m, host_bw),
+        _row(f"post_check_m{m}", cfg, m_p, a_post, m, host_bw),
+    ]
+    rows[0]["check_every"] = rows[1]["check_every"] = m
+    rows[1]["check_bytes_per_step"] = check_bytes / m
+    speedup = m_p.median_s / m_f.median_s
+    return rows, speedup
+
+
 def bench_temporal(cfg: Diffusion3DConfig, nsteps: int, iters: int = 20,
                    host_bw: float | None = None):
     """k sequential single-step launches vs the fused k-step path."""
@@ -255,38 +337,52 @@ def bench_temporal(cfg: Diffusion3DConfig, nsteps: int, iters: int = 20,
 
 
 def main(out_rows=None, nsteps: int = 1, iters: int = 20, sizes=None,
-         json_path: str | None = None, march_axis: int | None = None):
+         json_path: str | None = None, march_axis: int | None = None,
+         check_every: int | None = None, checks_only: bool = False):
     all_rows = []
     cfgs = sizes if sizes is not None else (BENCH_128, BENCH_256)
     # one STREAM probe for the whole report: every row's roofline fraction
     # shares a single T_peak denominator
     host_bw = teff.measure_host_bandwidth()
-    for cfg in cfgs:
-        all_rows += bench(cfg, iters=iters, host_bw=host_bw)
-    speedup = all_rows[0]["t_eff_GBs"] / all_rows[1]["t_eff_GBs"]
+    speedup = None
+    if not checks_only:
+        for cfg in cfgs:
+            all_rows += bench(cfg, iters=iters, host_bw=host_bw)
+        speedup = all_rows[0]["t_eff_GBs"] / all_rows[1]["t_eff_GBs"]
     temporal_speedups: dict[int, float] = {}
-    if nsteps > 1:
+    if nsteps > 1 and not checks_only:
         for cfg in cfgs:
             rows, sp = bench_temporal(cfg, nsteps, iters=iters,
                                       host_bw=host_bw)
             all_rows += rows
             temporal_speedups[cfg.nx] = sp
     march_speedups: dict[int, float] = {}
-    if march_axis is not None:
+    if march_axis is not None and not checks_only:
         for cfg in cfgs:
             rows, sp, _ = bench_march(cfg, march_axis, iters=iters,
                                       host_bw=host_bw, nsteps=nsteps)
             all_rows += rows
             march_speedups[cfg.nx] = sp
+    check_speedups: dict[int, float] = {}
+    if check_every is not None:
+        for cfg in cfgs:
+            rows, sp = bench_checks(cfg, check_every, iters=iters,
+                                    host_bw=host_bw)
+            all_rows += rows
+            check_speedups[cfg.nx] = sp
     for r in all_rows:
         print(f"teff_{r['name']}_{r['n']},{r['per_step_s']*1e6:.1f},"
               f"T_eff={r['t_eff_GBs']:.2f}GB/s frac={r['frac_of_host_peak']:.3f}"
               f" frac_blocked={r['frac_of_host_peak_blocked']:.3f}")
-    print(f"teff_speedup_kernel_vs_broadcast_{all_rows[0]['n']},{speedup:.2f},x")
+    if speedup is not None:
+        print(f"teff_speedup_kernel_vs_broadcast_{all_rows[0]['n']},{speedup:.2f},x")
     for n, sp in temporal_speedups.items():
         print(f"teff_speedup_fused{nsteps}_vs_seq_{n},{sp:.2f},x")
     for n, sp in march_speedups.items():
         print(f"teff_speedup_march{march_axis}_vs_parallel_{n},{sp:.2f},x")
+    for n, sp in check_speedups.items():
+        print(f"teff_speedup_fusedcheck_vs_post_m{check_every}_{n},"
+              f"{sp:.2f},x")
     if json_path:
         # per-size roofline positions from the analytic cost model (the
         # IR-traced flop/byte counts against the v5e roofline constants);
@@ -307,10 +403,13 @@ def main(out_rows=None, nsteps: int = 1, iters: int = 20, sizes=None,
         with open(json_path, "w") as f:
             json.dump({"rows": all_rows, "nsteps": nsteps,
                        "march_axis": march_axis,
+                       "check_every": check_every,
                        "fused_vs_seq_speedup":
                            {str(n): sp for n, sp in temporal_speedups.items()},
                        "march_vs_parallel_speedup":
                            {str(n): sp for n, sp in march_speedups.items()},
+                       "fusedcheck_vs_post_speedup":
+                           {str(n): sp for n, sp in check_speedups.items()},
                        "roofline_v5e": rooflines,
                        "meta": bench_meta()},
                       f, indent=1)
@@ -320,7 +419,8 @@ def main(out_rows=None, nsteps: int = 1, iters: int = 20, sizes=None,
     # the gate values: worst size measured, so a regression anywhere fails
     worst = min(temporal_speedups.values()) if temporal_speedups else None
     worst_march = min(march_speedups.values()) if march_speedups else None
-    return all_rows, worst, worst_march
+    worst_check = min(check_speedups.values()) if check_speedups else None
+    return all_rows, worst, worst_march, worst_check
 
 
 if __name__ == "__main__":
@@ -333,15 +433,30 @@ if __name__ == "__main__":
     ap.add_argument("--march-axis", type=int, default=None,
                     help="streamed-execution axis; adds march-vs-parallel "
                          "rows and records BENCH_teff_march_n{N}.json")
+    ap.add_argument("--check-every", type=int, default=None,
+                    help="convergence-check cadence m; adds fused-check vs "
+                         "step+separate-norm rows and records "
+                         "BENCH_teff_checks_n{N}.json")
+    ap.add_argument("--checks-only", action="store_true",
+                    help="with --check-every: record ONLY the check rows "
+                         "(keeps the committed trajectory free of "
+                         "re-measured base rows)")
     ap.add_argument("--json", default=None,
                     help="output JSON path (default BENCH_teff_n{N}_k{K}.json "
                          "when --nsteps > 1, BENCH_teff_march_n{N}.json with "
-                         "--march-axis)")
+                         "--march-axis, BENCH_teff_checks_n{N}.json with "
+                         "--check-every)")
     ap.add_argument("--check-speedup", type=float, default=None,
                     help="exit nonzero unless fused/seq speedup >= this")
     ap.add_argument("--check-march-speedup", type=float, default=None,
                     help="exit nonzero unless march/parallel speedup >= this")
+    ap.add_argument("--check-reduction-speedup", type=float, default=None,
+                    help="exit nonzero unless fused-check/post-check "
+                         "speedup >= this")
     args = ap.parse_args()
+    if args.checks_only and args.check_every is None:
+        ap.error("--checks-only needs --check-every (it would otherwise "
+                 "measure nothing and record an empty row set)")
 
     sizes = None
     if args.size is not None:
@@ -349,15 +464,18 @@ if __name__ == "__main__":
         sizes = [dataclasses.replace(BENCH_128, nx=args.size, ny=args.size,
                                      nz=args.size)]
     json_path = args.json
-    if json_path is None and args.march_axis is not None:
-        tag = f"n{args.size}" if args.size is not None else "n128_256"
+    tag = f"n{args.size}" if args.size is not None else "n128_256"
+    if json_path is None and args.check_every is not None:
+        json_path = f"BENCH_teff_checks_{tag}_m{args.check_every}.json"
+    elif json_path is None and args.march_axis is not None:
         ktag = f"_k{args.nsteps}" if args.nsteps > 1 else ""
         json_path = f"BENCH_teff_march_{tag}{ktag}.json"
     elif json_path is None and args.nsteps > 1:
-        tag = f"n{args.size}" if args.size is not None else "n128_256"
         json_path = f"BENCH_teff_{tag}_k{args.nsteps}.json"
-    _, sp, spm = main(nsteps=args.nsteps, iters=args.iters, sizes=sizes,
-                      json_path=json_path, march_axis=args.march_axis)
+    _, sp, spm, spc = main(nsteps=args.nsteps, iters=args.iters, sizes=sizes,
+                           json_path=json_path, march_axis=args.march_axis,
+                           check_every=args.check_every,
+                           checks_only=args.checks_only)
     if args.check_speedup is not None:
         if sp is None or sp < args.check_speedup:
             print(f"FAIL: fused/seq speedup {sp} < {args.check_speedup}")
@@ -366,4 +484,9 @@ if __name__ == "__main__":
         if spm is None or spm < args.check_march_speedup:
             print(f"FAIL: march/parallel speedup {spm} < "
                   f"{args.check_march_speedup}")
+            sys.exit(1)
+    if args.check_reduction_speedup is not None:
+        if spc is None or spc < args.check_reduction_speedup:
+            print(f"FAIL: fused-check/post-check speedup {spc} < "
+                  f"{args.check_reduction_speedup}")
             sys.exit(1)

@@ -1,11 +1,18 @@
-"""Perf-regression guard over the BENCH_teff_*.json trajectory.
+"""Perf-regression guard over the BENCH_*.json trajectories.
 
 The benchmark records were append-only JSON with no reader; this closes
-the loop: the newest record's rows are diffed against the most recent
-older record that shares the same row key (``name``, grid size ``n``,
-``nsteps``) and a compatible ``_meta.py`` stamp (same jax backend — a
-CPU record is never judged against a TPU one), and any per-step-time
-regression beyond the threshold fails the run.
+the loop for BOTH record families: within each scanned group
+(``BENCH_teff*.json`` and ``BENCH_solvers*.json`` by default), the
+newest record's rows are diffed against the most recent older record
+that shares the same row key and a compatible ``_meta.py`` stamp (same
+jax backend — a CPU record is never judged against a TPU one), and any
+per-step-time regression beyond the threshold fails the run.
+
+Row keys: teff records key by (``name``, grid size ``n``, ``nsteps``);
+solver records (nested dicts) key by (solver, variant, n) — e.g.
+``("porosity", "jnp", 64)``, ``("gp", "fused_k2", 32)``. Interpret-mode
+``pallas`` solver timings are skipped (correctness-path records, pure
+noise), as are the unjitted ``broadcast`` teff baselines.
 
     PYTHONPATH=src python benchmarks/compare.py            # scan cwd
     PYTHONPATH=src python benchmarks/compare.py OLD NEW    # explicit pair
@@ -39,10 +46,56 @@ def row_key(row: dict) -> tuple:
 SKIP_SUBSTRINGS = ("broadcast",)   # unjitted didactic baselines: pure noise
 
 
-def record_rows(rec: dict) -> dict:
-    return {row_key(r): r for r in rec.get("rows", [])
-            if "per_step_s" in r
+def teff_rows(rec: dict) -> dict:
+    return {row_key(r): float(r["per_step_s"])
+            for r in rec.get("rows", [])
+            if isinstance(r, dict) and "per_step_s" in r
             and not any(s in str(r.get("name")) for s in SKIP_SUBSTRINGS)}
+
+
+def solver_rows(rec: dict) -> dict:
+    """Flatten a BENCH_solvers record (nested per-solver dicts) into
+    ``(solver, variant, n) -> per-step microseconds``. Interpret-mode
+    pallas timings are excluded: on non-TPU hosts they are correctness-
+    path records whose wall time says nothing about the engine."""
+    rows: dict = {}
+    r = rec.get("rows")
+    if not isinstance(r, dict):
+        return rows
+    for solver, key in (("porosity", "porosity_coupled"),
+                        ("gp", "gp_coupled")):
+        d = r.get(key)
+        if not isinstance(d, dict):
+            continue
+        n = d.get("n")
+        for variant in ("jnp", "two_launch"):
+            if f"{variant}_us" in d:
+                rows[(solver, variant, n)] = float(d[f"{variant}_us"]) / 1e6
+        t = d.get("temporal") or {}
+        if "fused_per_step_us" in t:
+            k = t.get("nsteps")
+            rows[(solver, f"fused_k{k}", n)] = \
+                float(t["fused_per_step_us"]) / 1e6
+            rows[(solver, f"seq_k{k}", n)] = \
+                float(t["sequential_per_step_us"]) / 1e6
+        mrow = d.get("march") or {}
+        if "jnp_us" in mrow:
+            rows[(solver, f"march{mrow.get('axis')}_jnp", n)] = \
+                float(mrow["jnp_us"]) / 1e6
+    for solver in ("diffusion", "gp"):
+        d = r.get(solver) or {}
+        if "framework_us" in d:
+            rows[(f"{solver}_translation", "framework", 0)] = \
+                float(d["framework_us"]) / 1e6
+    return rows
+
+
+def record_rows(rec: dict) -> dict:
+    """Row-key -> per-step time for either record family (auto-detected:
+    teff records carry a rows LIST, solver records a rows DICT)."""
+    if isinstance(rec.get("rows"), dict):
+        return solver_rows(rec)
+    return teff_rows(rec)
 
 
 def meta_compatible(old: dict, new: dict) -> tuple[bool, str]:
@@ -68,8 +121,10 @@ def sort_stamp(rec: dict) -> str:
     return (rec.get("meta") or {}).get("timestamp_utc", "")
 
 
-def compare(old: dict, new: dict, threshold: float) -> list[str]:
-    """Regression lines (empty = pass) for rows shared by two records."""
+def compare(old: dict, new: dict, threshold: float,
+            keys=None) -> list[str]:
+    """Regression lines (empty = pass) for rows shared by two records
+    (restricted to ``keys`` when given)."""
     ok, note = meta_compatible(old, new)
     if not ok:
         print(f"# skip {old['_path']} vs {new['_path']}: {note}")
@@ -78,9 +133,12 @@ def compare(old: dict, new: dict, threshold: float) -> list[str]:
         print(f"# note: {note}")
     failures = []
     orows, nrows = record_rows(old), record_rows(new)
-    for key in sorted(set(orows) & set(nrows), key=str):
-        t_old = float(orows[key]["per_step_s"])
-        t_new = float(nrows[key]["per_step_s"])
+    shared = set(orows) & set(nrows)
+    if keys is not None:
+        shared &= set(keys)
+    for key in sorted(shared, key=str):
+        t_old = orows[key]
+        t_new = nrows[key]
         ratio = t_new / t_old if t_old else float("inf")
         status = "OK" if ratio <= 1.0 + threshold else "REGRESSION"
         print(f"{status} {key}: {t_old*1e6:.1f}us -> {t_new*1e6:.1f}us "
@@ -91,12 +149,55 @@ def compare(old: dict, new: dict, threshold: float) -> list[str]:
     return failures
 
 
+def scan_group(dirname: str, pattern: str, threshold: float) -> list[str]:
+    """Newest-per-ROW-KEY comparison within one record family.
+
+    Every row key is guarded at its newest occurrence against its most
+    recent older baseline — so a freshly committed record that happens
+    to share no keys with anything (e.g. a checks-only run) cannot
+    shadow the rest of the group's trajectory the way a newest-RECORD
+    scan would."""
+    paths = sorted(glob.glob(os.path.join(dirname, pattern)))
+    recs = sorted((load(p) for p in paths), key=sort_stamp)
+    if len(recs) < 2:
+        print(f"# {len(recs)} record(s) matching {pattern!r} in "
+              f"{dirname!r}: nothing to compare")
+        return []
+    failures: list[str] = []
+    guarded: set = set()       # keys whose newest occurrence was handled
+    compared = 0
+    for i in range(len(recs) - 1, 0, -1):
+        new = recs[i]
+        pending = set(record_rows(new)) - guarded
+        for old in reversed(recs[:i]):
+            if not pending:
+                break
+            shared = set(record_rows(old)) & pending
+            if not shared:
+                continue
+            if not meta_compatible(old, new)[0]:
+                continue  # keep looking older for a compatible baseline
+            failures += compare(old, new, threshold, keys=shared)
+            compared += len(shared)
+            pending -= shared
+        guarded |= set(record_rows(new))
+    if not compared:
+        print(f"# no record pair matching {pattern!r} shares a row key: "
+              "nothing to compare")
+    return failures
+
+
+DEFAULT_PATTERNS = ("BENCH_teff*.json", "BENCH_solvers*.json")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("files", nargs="*",
                     help="explicit OLD NEW pair; default scans --dir")
     ap.add_argument("--dir", default=".")
-    ap.add_argument("--pattern", default="BENCH_teff*.json")
+    ap.add_argument("--pattern", default=None,
+                    help="scan a single glob instead of the default "
+                         f"groups {DEFAULT_PATTERNS}")
     ap.add_argument("--threshold", type=float, default=0.15,
                     help="allowed per-step slowdown fraction (default 15%%)")
     args = ap.parse_args(argv)
@@ -107,22 +208,11 @@ def main(argv=None) -> int:
         failures = compare(load(args.files[0]), load(args.files[1]),
                            args.threshold)
     else:
-        paths = sorted(glob.glob(os.path.join(args.dir, args.pattern)))
-        recs = sorted((load(p) for p in paths), key=sort_stamp)
-        if len(recs) < 2:
-            print(f"# {len(recs)} record(s) matching {args.pattern!r} in "
-                  f"{args.dir!r}: nothing to compare")
-            return 0
-        newest = recs[-1]
+        patterns = ((args.pattern,) if args.pattern is not None
+                    else DEFAULT_PATTERNS)
         failures = []
-        # walk older records newest-first until one shares a row key
-        for old in reversed(recs[:-1]):
-            if set(record_rows(old)) & set(record_rows(newest)):
-                failures = compare(old, newest, args.threshold)
-                break
-        else:
-            print("# no older record shares a row key with "
-                  f"{newest['_path']}: nothing to compare")
+        for pattern in patterns:
+            failures += scan_group(args.dir, pattern, args.threshold)
     if failures:
         print("\nFAIL: per-step regression beyond "
               f"{args.threshold:.0%}:\n  " + "\n  ".join(failures))

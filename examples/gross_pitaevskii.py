@@ -21,9 +21,17 @@ infers the radius-2 footprint from the two-frame symplectic update
 itself. ``--bc`` declares per-output boundary conditions fused into the
 engine step (default: the seed's frozen boundary ring).
 
+Drift-guard mode (``--tol``): the fused kernel gains ``sum_sq(re2)`` /
+``sum_sq(im2)`` reduction epilogues — the mass integral folds inside the
+same launch as the update — and ``core.iterate.solve_until(until=
+"above")`` iterates on device until the relative mass drift EXCEEDS the
+tolerance (numerical instability tripwire) or ``--nt`` steps complete,
+with zero host syncs between checks.
+
     PYTHONPATH=src python examples/gross_pitaevskii.py [--n 48] [--nt 200]
         [--backend jnp|pallas] [--two-launch]
         [--bc none|neumann|dirichlet|periodic]
+        [--tol 1e-3] [--check-every 10]
 """
 from __future__ import annotations
 
@@ -33,7 +41,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core import Grid, fd3d as fd, init_parallel_stencil
+from repro.core import Grid, fd3d as fd, init_parallel_stencil, iterate
 from repro.ir import BoundaryCondition
 
 
@@ -46,6 +54,8 @@ class GPConfig:
     fused: bool = True
     bc: str = "none"           # none | neumann | dirichlet | periodic
     interpret: bool | None = None
+    tol: float | None = None   # mass-drift tripwire (None: fixed nt)
+    check_every: int = 10      # drift cadence in --tol mode
 
 
 def boundary_conditions(cfg: GPConfig) -> dict | None:
@@ -149,7 +159,50 @@ def timestep(grid: Grid) -> float:
     return 0.2 * min(grid.spacing) ** 2   # explicit stability
 
 
+def solve_guarded(cfg: GPConfig) -> dict:
+    """Device-resident drift-guarded run: the mass integral rides the
+    fused launch as ``sum_sq`` epilogues and ``solve_until(until=
+    "above")`` stops the on-device loop the moment the relative drift
+    exceeds ``cfg.tol`` (instability tripwire) — or after ``cfg.nt``
+    steps, whichever first. Zero host syncs between checks."""
+    if not cfg.fused:
+        raise ValueError(
+            "--tol drives the fused coupled kernel; the two-launch scheme "
+            "has no single launch to attach the mass epilogue to — drop "
+            "--two-launch"
+        )
+    if cfg.bc == "periodic":
+        raise ValueError(
+            "--tol needs the fused mass epilogue, which cannot ride a "
+            "periodic-bc launch (the wrap scatter runs after it)"
+        )
+    grid, re, im, V = init_state(cfg)
+    dt = timestep(grid)
+    kern = make_step(grid, cfg).kernels[0]
+    rkern = kern.with_reductions({"m_re": "sum_sq(re2)",
+                                  "m_im": "sum_sq(im2)"})
+    mass0 = float(jnp.sum(re ** 2 + im ** 2))
+    inv2 = tuple(1.0 / d ** 2 for d in grid.spacing)
+
+    def drift_of(reds):
+        return jnp.abs((reds["m_re"] + reds["m_im"]) - mass0) / mass0
+
+    res = iterate.solve_until(
+        rkern, dict(re2=re, im2=im, re=re, im=im, V=V),
+        dict(g=cfg.g, dt=dt, _dx2=inv2[0], _dy2=inv2[1], _dz2=inv2[2]),
+        tol=cfg.tol, max_iters=cfg.nt, check_every=cfg.check_every,
+        error=drift_of, until="above")
+    re, im = res.fields["re"], res.fields["im"]
+    mass = float(res.reds["m_re"] + res.reds["m_im"])
+    return {"grid": grid, "re": re, "im": im, "V": V,
+            "mass0": mass0, "mass": mass, "drift": float(res.err),
+            "iters": int(res.iters),
+            "tripped": bool(res.err > cfg.tol)}
+
+
 def solve(cfg: GPConfig = GPConfig()) -> dict:
+    if cfg.tol is not None:
+        return solve_guarded(cfg)
     grid, re, im, V = init_state(cfg)
     dt = timestep(grid)
     step = jax.jit(make_step(grid, cfg))
@@ -159,7 +212,8 @@ def solve(cfg: GPConfig = GPConfig()) -> dict:
     mass = float(jnp.sum(re ** 2 + im ** 2))
     drift = abs(mass - mass0) / mass0
     return {"grid": grid, "re": re, "im": im, "V": V,
-            "mass0": mass0, "mass": mass, "drift": drift}
+            "mass0": mass0, "mass": mass, "drift": drift,
+            "iters": cfg.nt}
 
 
 def main(argv=None):
@@ -173,14 +227,27 @@ def main(argv=None):
     ap.add_argument("--bc", default="none",
                     choices=["none", "neumann", "dirichlet", "periodic"],
                     help="boundary condition fused into the engine step")
+    ap.add_argument("--tol", type=float, default=None,
+                    help="mass-drift tripwire: iterate on device until the "
+                         "relative drift exceeds tol (fused sum_sq checks, "
+                         "zero host syncs); --nt becomes the step cap")
+    ap.add_argument("--check-every", type=int, default=10,
+                    help="drift cadence (steps per check) in --tol mode")
     args = ap.parse_args(argv)
     cfg = GPConfig(n=args.n, nt=args.nt, g=args.g, backend=args.backend,
-                   fused=not args.two_launch, bc=args.bc)
+                   fused=not args.two_launch, bc=args.bc, tol=args.tol,
+                   check_every=args.check_every)
     r = solve(cfg)
-    print(f"GP: {cfg.nt} steps on {r['grid'].shape} [{cfg.backend}"
+    print(f"GP: {r['iters']} steps on {r['grid'].shape} [{cfg.backend}"
           f"{'/fused' if cfg.fused else '/two-launch'}] "
           f"mass drift {r['drift']:.2e} (explicit scheme, O(dt^2) per step)")
-    assert r["drift"] < 0.05, "mass not conserved — numerical instability"
+    if cfg.tol is not None:
+        status = ("TRIPPED: drift crossed tol — instability caught on "
+                  "device" if r["tripped"] else "drift stayed under tol")
+        print(f"GP drift guard: {status} after {r['iters']} steps "
+              f"(tol={cfg.tol:g})")
+    else:
+        assert r["drift"] < 0.05, "mass not conserved — numerical instability"
 
 
 if __name__ == "__main__":

@@ -25,9 +25,18 @@ the staggered flux offsets itself. Boundary conditions are declared per
 output (``--bc``) and fused into the engine's step (bitwise-equal to the
 seed's explicit ``neumann0`` post-pass).
 
+Convergence-driven mode (``--tol``): the pseudo-transient iteration runs
+to *steady state* instead of a fixed step count — the coupled kernel
+gains a fused ``max_abs_diff(Pe2, Pe)`` reduction epilogue (the residual
+folds inside the same launch as the update; no separate norm pass) and
+``core.iterate.solve_until`` drives the loop on device with a
+``lax.while_loop``: zero host syncs between checks, ``--nt`` becomes the
+iteration cap.
+
     PYTHONPATH=src python examples/porosity_waves.py [--n 128] [--nt 500]
         [--backend jnp|pallas] [--flux-split]
         [--bc neumann|dirichlet|periodic]
+        [--tol 1e-6] [--check-every 10]
 """
 from __future__ import annotations
 
@@ -37,7 +46,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core import Grid, fd2d as fd, init_parallel_stencil
+from repro.core import Grid, fd2d as fd, init_parallel_stencil, iterate
 from repro.ir import BoundaryCondition
 
 
@@ -54,6 +63,8 @@ class PorosityConfig:
     flux_split: bool = False
     bc: str = "neumann"        # neumann | dirichlet | periodic | none
     interpret: bool | None = None
+    tol: float | None = None   # steady-state residual (None: fixed nt)
+    check_every: int = 10      # residual cadence in --tol mode
 
 
 def boundary_conditions(cfg: PorosityConfig) -> dict | None:
@@ -164,16 +175,51 @@ def make_step(grid: Grid, cfg: PorosityConfig):
     return step
 
 
-def solve(cfg: PorosityConfig = PorosityConfig()) -> dict:
-    """Run ``cfg.nt`` pseudo-time steps; returns fields + diagnostics."""
-    grid, phi, Pe = init_state(cfg)
+def solve_steady(cfg: PorosityConfig, grid: Grid, phi, Pe) -> tuple:
+    """Device-resident steady-state drive from the given initial state:
+    iterate the coupled kernel until ``max|Pe2 - Pe| < cfg.tol``
+    (checked every ``cfg.check_every`` sweeps through the fused
+    reduction epilogue — the residual never costs a second whole-array
+    pass or a host round-trip), capped at ``cfg.nt`` sweeps. Returns
+    (phi, Pe, iters, err)."""
+    if cfg.flux_split:
+        raise ValueError(
+            "--tol drives the fused coupled kernel; the flux-split scheme "
+            "splits the update over two launches and has no single kernel "
+            "to attach the residual to — drop --flux-split"
+        )
+    if cfg.bc == "periodic":
+        raise ValueError(
+            "--tol needs the fused residual epilogue, which cannot ride a "
+            "periodic-bc launch (the wrap scatter runs after it); use "
+            "--bc neumann or dirichlet"
+        )
     dtau = timestep(cfg, grid)
-    step = jax.jit(make_step(grid, cfg))
+    kern = make_step(grid, cfg).kernels[0]
+    rkern = kern.with_reductions({"err": "max_abs_diff(Pe2, Pe)"})
+    res = iterate.solve_until(
+        rkern, dict(phi2=phi, Pe2=Pe, phi=phi, Pe=Pe), dict(dtau=dtau),
+        tol=cfg.tol, max_iters=cfg.nt, check_every=cfg.check_every)
+    # rotation targets hold the newest state after the in-loop rotation
+    return res.fields["phi"], res.fields["Pe"], int(res.iters), \
+        float(res.err)
+
+
+def solve(cfg: PorosityConfig = PorosityConfig()) -> dict:
+    """Run ``cfg.nt`` pseudo-time steps (or, with ``cfg.tol``, iterate on
+    device until steady state); returns fields + diagnostics."""
+    iters, err = cfg.nt, None
+    grid, phi, Pe = init_state(cfg)
     peak0_y = float(jnp.argmax(jnp.max(phi, axis=0)))
-    for it in range(cfg.nt):
-        phi, Pe = step(phi, Pe, dtau)
-        if (it + 1) % 50 == 0 and not bool(jnp.isfinite(phi).all()):
-            raise FloatingPointError(f"diverged at step {it}")
+    if cfg.tol is not None:
+        phi, Pe, iters, err = solve_steady(cfg, grid, phi, Pe)
+    else:
+        dtau = timestep(cfg, grid)
+        step = jax.jit(make_step(grid, cfg))
+        for it in range(cfg.nt):
+            phi, Pe = step(phi, Pe, dtau)
+            if (it + 1) % 50 == 0 and not bool(jnp.isfinite(phi).all()):
+                raise FloatingPointError(f"diverged at step {it}")
     if not bool(jnp.isfinite(phi).all()):
         raise FloatingPointError(f"diverged by step {cfg.nt}")
     dy = grid.spacing[1]
@@ -187,6 +233,8 @@ def solve(cfg: PorosityConfig = PorosityConfig()) -> dict:
         "pe_absmax": float(jnp.abs(Pe).max()),
         "peak0_y": peak0_y * dy,
         "peak_y": peak_y * dy,
+        "iters": iters,
+        "residual": err,
     }
 
 
@@ -201,12 +249,22 @@ def main(argv=None):
     ap.add_argument("--bc", default="neumann",
                     choices=["neumann", "dirichlet", "periodic"],
                     help="boundary condition fused into the engine step")
+    ap.add_argument("--tol", type=float, default=None,
+                    help="steady-state residual: iterate on device until "
+                         "max|dPe| < tol (fused check, zero host syncs); "
+                         "--nt becomes the iteration cap")
+    ap.add_argument("--check-every", type=int, default=10,
+                    help="residual cadence (steps per check) in --tol mode")
     args = ap.parse_args(argv)
     cfg = PorosityConfig(n=args.n, nt=args.nt, npow=args.npow,
                          backend=args.backend, flux_split=args.flux_split,
-                         bc=args.bc)
+                         bc=args.bc, tol=args.tol,
+                         check_every=args.check_every)
     r = solve(cfg)
-    print(f"porosity wave: {cfg.nt} steps on {r['grid'].shape} "
+    steps = (f"{r['iters']} steps (tol={cfg.tol:g}, "
+             f"residual={r['residual']:.2e})" if cfg.tol is not None
+             else f"{cfg.nt} steps")
+    print(f"porosity wave: {steps} on {r['grid'].shape} "
           f"[{cfg.backend}{'/flux-split' if cfg.flux_split else ''}"
           f"/bc={cfg.bc}]; "
           f"phi in [{r['phi_min']:.4f}, {r['phi_max']:.4f}]; "

@@ -1,0 +1,179 @@
+"""Device-resident convergence-driven iteration (``solve_until``).
+
+The paper's pseudo-transient solvers iterate until ``err = max|dT|``
+drops under a tolerance. The classic host loop
+
+    while err > tol: err = float(norm(step(...)))   # host sync per check
+
+serializes the step stream on a device->host transfer every check. With
+the engine's fused reduction epilogues the error is a device scalar that
+costs no extra HBM pass — so the WHOLE iteration can live on device: a
+``lax.while_loop`` whose body advances ``check_every`` steps (the first
+``m-1`` through the reduction-free kernel variant, the last through the
+checked one), rotates the double buffers in place (the carry is donated
+— XLA updates the field buffers without copies), and whose condition
+reads the fused error scalar. Zero host transfers from the first step to
+convergence; one compiled program regardless of iteration count.
+
+``until="below"`` runs while ``err > tol`` (convergence: stop once the
+residual drops under tol); ``until="above"`` runs while ``err <= tol``
+(drift guard: stop once a conserved-quantity error exceeds tol).
+
+Caveat: a ``while_loop`` has data-dependent trip count, so the program
+cannot be reverse-differentiated and steps are taken in multiples of
+``check_every`` (``iters`` may overshoot ``max_iters`` by at most
+``check_every - 1``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SolveResult", "make_solver", "solve_until"]
+
+
+@dataclasses.dataclass
+class SolveResult:
+    """Final state of a convergence-driven solve. Everything is a device
+    value — reading ``.err``/``.iters`` as Python numbers is the caller's
+    (single, final) host sync."""
+
+    fields: dict[str, jax.Array]   # all field buffers, rotated in place
+    reds: dict[str, jax.Array]     # the last check's fused reductions
+    err: jax.Array                 # last error scalar (float32)
+    iters: jax.Array               # steps taken (int32)
+
+    def output(self, kernel) -> Any:
+        """The solver's answer: the rotation target of each output holds
+        the newest value after the final in-loop rotation."""
+        tgts = {o: self.fields[t] for o, t in kernel.rotations.items()}
+        if len(kernel.outputs) == 1:
+            return tgts[kernel.outputs[0]]
+        return tgts
+
+
+def _resolve_error(kernel, error) -> Callable[[Mapping[str, Any]], Any]:
+    if error is None:
+        if len(kernel.reductions) != 1:
+            raise ValueError(
+                f"kernel declares reductions {tuple(kernel.reductions)}; "
+                "pass error=<name> (or a callable over the reduction dict) "
+                "to pick the convergence scalar"
+            )
+        error = next(iter(kernel.reductions))
+    if isinstance(error, str):
+        if error not in kernel.reductions:
+            raise ValueError(
+                f"error={error!r} is not a declared reduction "
+                f"(have {tuple(kernel.reductions)})"
+            )
+        name = error
+        return lambda reds: reds[name]
+    return error
+
+
+def make_solver(
+    kernel,
+    scalars: Mapping[str, Any] | None = None,
+    *,
+    check_every: int = 1,
+    error: str | Callable | None = None,
+    until: str = "below",
+):
+    """Build the un-jitted driver ``solver(fields, tol, max_iters) ->
+    (fields, reds, err, iters)`` for :func:`solve_until`.
+
+    Exposed separately so callers (and the zero-host-sync test) can
+    inspect the traced program: ``jax.make_jaxpr(solver)(...)`` is ONE
+    ``while`` — no transfers, no callbacks between checks.
+    """
+    if not kernel.reductions:
+        raise ValueError(
+            "solve_until needs a kernel with fused reductions "
+            "(declare reductions={'err': 'max_abs_diff(T2, T)'}-style on "
+            "@parallel)"
+        )
+    rot = kernel.rotations
+    if not rot or set(kernel.outputs) - set(rot):
+        raise ValueError(
+            "solve_until rotates double buffers between steps and needs "
+            "rotations covering every output (pass rotations={'T2': 'T'}-"
+            "style mapping to @parallel)"
+        )
+    check_every = int(check_every)
+    if check_every < 1:
+        raise ValueError(f"check_every must be >= 1, got {check_every}")
+    if until not in ("below", "above"):
+        raise ValueError(f"until must be 'below' or 'above', got {until!r}")
+    err_fn = _resolve_error(kernel, error)
+    scalars = dict(scalars or {})
+    plain = kernel.with_reductions(None)
+    single = len(kernel.outputs) == 1
+
+    def as_dict(res):
+        return {kernel.outputs[0]: res} if single else dict(res)
+
+    def rotate(cur, outs):
+        cur = dict(cur)
+        for o, tgt in rot.items():
+            cur[o], cur[tgt] = cur[tgt], outs[o]
+        return cur
+
+    def solver(fields, tol, max_iters):
+        tol = jnp.asarray(tol, jnp.float32)
+        max_iters = jnp.asarray(max_iters, jnp.int32)
+        cur0 = dict(fields)
+        reds0 = {n: jnp.zeros((), jnp.float32) for n in kernel.reductions}
+        err0 = jnp.float32(jnp.inf if until == "below" else -jnp.inf)
+
+        def cond(state):
+            _, _, err, it = state
+            keep = err > tol if until == "below" else err <= tol
+            return keep & (it < max_iters)
+
+        def body(state):
+            cur, _, _, it = state
+            for _ in range(check_every - 1):
+                cur = rotate(cur, as_dict(plain(**cur, **scalars)))
+            outs, reds = kernel(**cur, **scalars)
+            cur = rotate(cur, as_dict(outs))
+            reds = {n: jnp.asarray(v, jnp.float32) for n, v in reds.items()}
+            err = jnp.asarray(err_fn(reds), jnp.float32)
+            return cur, reds, err, it + check_every
+
+        return jax.lax.while_loop(cond, body, (cur0, reds0, err0,
+                                               jnp.int32(0)))
+
+    return solver
+
+
+def solve_until(
+    kernel,
+    fields: Mapping[str, Any],
+    scalars: Mapping[str, Any] | None = None,
+    *,
+    tol: float,
+    max_iters: int,
+    check_every: int = 1,
+    error: str | Callable | None = None,
+    until: str = "below",
+) -> SolveResult:
+    """Iterate ``kernel`` on device until its fused error scalar crosses
+    ``tol`` (or ``max_iters`` steps), checking every ``check_every``
+    steps — zero host transfers between checks.
+
+    ``kernel`` is a :class:`~repro.core.parallel.StencilKernel` with
+    ``reductions=`` and ``rotations=`` declared. ``fields`` maps every
+    field argument to its initial array; ``scalars`` the non-field
+    arguments. ``error`` picks the convergence scalar: a reduction name
+    (default: the single declared reduction) or a callable over the
+    reduction dict (e.g. a relative-drift formula); it must be cheap —
+    it runs inside the loop condition's body on device.
+    """
+    solver = jax.jit(make_solver(kernel, scalars, check_every=check_every,
+                                 error=error, until=until))
+    cur, reds, err, iters = solver(dict(fields), tol, max_iters)
+    return SolveResult(fields=cur, reds=reds, err=err, iters=iters)

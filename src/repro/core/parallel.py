@@ -94,6 +94,7 @@ class ParallelStencil:
         rotations: Mapping[str, str] | None = None,
         bc: Mapping[str, Any] | None = None,
         march_axis: int | None = None,
+        reductions: Mapping[str, Any] | None = None,
     ) -> Callable[[Callable], "StencilKernel"]:
         """``radius`` is optional: the stencil IR infers per-field,
         per-axis footprints from the update function itself; declaring it
@@ -107,14 +108,25 @@ class ParallelStencil:
         backend slides per-field VMEM plane queues along it instead of
         refetching overlapping halo windows, the jnp backend realizes the
         same marching order as a scan over plane slabs (cache-resident
-        working set). Streamed results equal the all-parallel path."""
+        working set). Streamed results equal the all-parallel path.
+
+        ``reductions`` declares named in-launch reduction epilogues
+        (``{"err": "max_abs_diff(T2, T)"}``-style, or ``ir.Reduction``
+        objects): the kernel call then returns ``(outputs, {name:
+        scalar})`` with the reductions folded inside the same launch as
+        the update — no second whole-array pass, no host sync (the
+        scalars stay on device; ``core.iterate.solve_until`` consumes
+        them inside a ``lax.while_loop``). Reductions reassociate:
+        cross-program comparisons (jnp vs pallas, fused vs post-pass)
+        are ``allclose``, never bitwise."""
         if march_axis is not None and not 0 <= int(march_axis) < self.ndims:
             raise ValueError(
                 f"march_axis {march_axis} out of range for ndims={self.ndims}")
 
         def deco(fn: Callable) -> StencilKernel:
             return StencilKernel(self, fn, tuple(outputs), radius, tile,
-                                 vmem_budget, rotations, bc, march_axis)
+                                 vmem_budget, rotations, bc, march_axis,
+                                 reductions)
 
         return deco
 
@@ -148,7 +160,8 @@ class StencilKernel:
                  radius: int | None, tile, vmem_budget: int,
                  rotations: Mapping[str, str] | None = None,
                  bc: Mapping[str, Any] | None = None,
-                 march_axis: int | None = None):
+                 march_axis: int | None = None,
+                 reductions: Mapping[str, Any] | None = None):
         self.ps = ps
         self.fn = fn
         self.outputs = outputs
@@ -158,9 +171,19 @@ class StencilKernel:
         self.rotations = dict(rotations) if rotations else None
         self.bc = _ir.bc.normalize_bcs(bc, outputs, ps.ndims)
         self.march_axis = None if march_axis is None else int(march_axis)
+        self.reductions = _ir.normalize_reductions(reductions)
+        if self.reductions and any(c.kind == "periodic"
+                                   for c in self.bc.values()):
+            raise ValueError(
+                "fused reductions cannot be declared next to a periodic "
+                "boundary condition: the wrap scatter runs after the "
+                "launch, so the in-launch fold would see pre-wrap face "
+                "values"
+            )
         self._cache: dict = {}
         self._geom_cache: dict = {}
         self._march_variants: dict = {}
+        self._red_variants: dict = {}
         functools.update_wrapper(self, fn)
 
     def marched(self, march_axis: int | None) -> "StencilKernel":
@@ -179,9 +202,41 @@ class StencilKernel:
         if v is None:
             v = StencilKernel(self.ps, self.fn, self.outputs, self.radius,
                               self.tile, self.vmem_budget, self.rotations,
-                              self.bc, march_axis)
+                              self.bc, march_axis, self.reductions)
             self._march_variants[march_axis] = v
         return v
+
+    def with_reductions(self, reductions: Mapping[str, Any] | None
+                        ) -> "StencilKernel":
+        """A variant of this kernel with a different fused-reduction set
+        (``None``/``{}`` strips them — the plain step a convergence
+        driver runs between checks). Memoized on the parent so the
+        checked and unchecked variants each compile once."""
+        reds = _ir.normalize_reductions(reductions)
+        if reds == self.reductions:
+            return self
+        key = tuple(sorted(reds.items()))
+        v = self._red_variants.get(key)
+        if v is None:
+            v = StencilKernel(self.ps, self.fn, self.outputs, self.radius,
+                              self.tile, self.vmem_budget, self.rotations,
+                              self.bc, self.march_axis, reds)
+            self._red_variants[key] = v
+        return v
+
+    def apply_reductions(self, outs: Mapping[str, Any],
+                         fields: Mapping[str, Any]) -> dict[str, Any]:
+        """The post-pass reference realization of this kernel's
+        reductions: whole-array folds over the final outputs (``outs``)
+        and the pre-step fields — exactly what a separate norm pass
+        computes. The fused epilogue is tested ``allclose`` against this
+        (bitwise only holds within one compiled program)."""
+        reds = {}
+        for name, r in self.reductions.items():
+            ops = [outs[op] if op in outs else fields[op]
+                   for op in r.operands]
+            reds[name] = r.fold(r.map_element(*ops))
+        return reds
 
     # -- argument classification ------------------------------------------
     def _split(self, kwargs: Mapping[str, Any]):
@@ -216,7 +271,8 @@ class StencilKernel:
             return self.fn(**fdict, **sdict)
 
         try:
-            ir = _ir.trace_stencil(update, shapes, self.outputs, scalar_names)
+            ir = _ir.trace_stencil(update, shapes, self.outputs, scalar_names,
+                                   reductions=self.reductions)
         except _ir.TraceError as e:
             if self.radius is None:
                 raise ValueError(
@@ -226,6 +282,21 @@ class StencilKernel:
                     f"the legacy symmetric geometry. Trace error: {e}"
                 ) from e
             ir = None
+            # The legacy fallback skips the trace, so the reduction
+            # operands must be validated here instead.
+            for name, r in self.reductions.items():
+                for op in r.operands:
+                    if op not in shapes:
+                        raise ValueError(
+                            f"reduction {name!r} = {r.describe()} reads "
+                            f"{op!r}, which is not a field of this kernel"
+                        )
+                    if any(b - s for b, s in zip(base, shapes[op])):
+                        raise ValueError(
+                            f"reduction {name!r} = {r.describe()} reads "
+                            f"staggered field {op!r}; reduction operands "
+                            "must be collocated"
+                        )
 
         if ir is not None and self.radius is not None \
                 and ir.inferred_radius != self.radius:
@@ -291,6 +362,12 @@ class StencilKernel:
                                             self.ps.dtype.itemsize)
 
     # -- backends -----------------------------------------------------------
+    # Every backend runner returns ``(outs, reds)`` — ``reds`` is None for
+    # kernels without declared reductions. The jnp realizations fold the
+    # reductions inline (whole-array jnp ops in the SAME jit trace as the
+    # update, so XLA fuses the check into the step instead of paying a
+    # second HBM pass); the pallas realization folds per-tile partials
+    # inside the launch itself.
     def _run_jnp(self, fields, scalars, base, geom: KernelGeometry):
         updates = self.fn(**fields, **scalars)
         ring = self.radius if geom.ir is None else None
@@ -314,7 +391,9 @@ class StencilKernel:
             if cond is not None:
                 res = cond.apply(res)
             out[name] = res
-        return out
+        reds = (self.apply_reductions(out, fields)
+                if self.reductions else None)
+        return out, reds
 
     def _march_write_geometry(self, fields, scalars, base, geom):
         """Per-output (modes, rings, off) from an abstract trace (no
@@ -442,7 +521,9 @@ class StencilKernel:
             if cond is not None:
                 arr = cond.apply(arr)
             out[o] = arr
-        return out
+        reds = (self.apply_reductions(out, fields)
+                if self.reductions else None)
+        return out, reds
 
     def _run_pallas(self, fields, scalars, base, shapes,
                     geom: KernelGeometry, nsteps: int = 1):
@@ -477,22 +558,23 @@ class StencilKernel:
                     max(rings[a] for rings in geom.ir.write_rings.values())
                     for a in range(self.ps.ndims)
                 ),
+                reductions=self.reductions,
             )
             self._cache[key] = run
-        return run(fields, scalars)
+        res = run(fields, scalars)
+        return res if self.reductions else (res, None)
 
     def __call__(self, **kwargs):
         fields, scalars, base, shapes = self._split(kwargs)
         geom = self._geometry(base, shapes, tuple(scalars))
         if self.ps.backend == "pallas":
-            outs = self._run_pallas(fields, scalars, base, shapes, geom)
+            outs, reds = self._run_pallas(fields, scalars, base, shapes, geom)
         elif self.march_axis is not None:
-            outs = self._run_jnp_march(fields, scalars, base, geom)
+            outs, reds = self._run_jnp_march(fields, scalars, base, geom)
         else:
-            outs = self._run_jnp(fields, scalars, base, geom)
-        if len(self.outputs) == 1:
-            return outs[self.outputs[0]]
-        return outs
+            outs, reds = self._run_jnp(fields, scalars, base, geom)
+        res = outs[self.outputs[0]] if len(self.outputs) == 1 else outs
+        return (res, reds) if self.reductions else res
 
     def _check_rotations(self):
         if not self.rotations or set(self.outputs) - set(self.rotations):
@@ -530,8 +612,8 @@ class StencilKernel:
         geom = self._geometry(base, shapes, tuple(scalars))
         periodic = any(c.kind == "periodic" for c in self.bc.values())
         if self.ps.backend == "pallas" and not periodic:
-            outs = self._run_pallas(fields, scalars, base, shapes, geom,
-                                    nsteps)
+            outs, reds = self._run_pallas(fields, scalars, base, shapes,
+                                          geom, nsteps)
         else:
             # True double-buffer rotation, unrolled: sweep s scatters into
             # the stale buffer of the (out, target) pair, which is dead two
@@ -548,13 +630,15 @@ class StencilKernel:
                                                            shapes, g)
             cur = dict(fields)
             for s in range(nsteps):
-                outs = step(cur, scalars, base, geom)
+                # Intermediate sweeps' reductions are dead values — XLA's
+                # DCE drops them under jit; only the final sweep's check
+                # (the k-step value, matching the fused launch) survives.
+                outs, reds = step(cur, scalars, base, geom)
                 if s < nsteps - 1:
                     for o, tgt in self.rotations.items():
                         cur[o], cur[tgt] = cur[tgt], outs[o]
-        if len(self.outputs) == 1:
-            return outs[self.outputs[0]]
-        return outs
+        res = outs[self.outputs[0]] if len(self.outputs) == 1 else outs
+        return (res, reds) if self.reductions else res
 
     @property
     def launch_info(self) -> dict:

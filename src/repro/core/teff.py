@@ -115,6 +115,24 @@ def halo_compute_overhead(block, radius: int, nsteps: int) -> float:
     return total / ideal - 1.0
 
 
+def a_eff_checked(a_eff_step: float, check_bytes: float,
+                  check_every: int = 1, fused: bool = True) -> float:
+    """Per-step ideal HBM traffic of an iterative solver that checks
+    convergence every ``check_every`` steps.
+
+    ``fused=True`` is the in-launch reduction epilogue: the check folds
+    over data already in flight, so the only extra traffic is the
+    per-tile partials write (rounded to zero here — O(n_blocks) scalars).
+    ``fused=False`` is the separate norm pass: ``check_bytes`` (each
+    operand field re-read once — e.g. ``ir.check_io_bytes``) lands on
+    every check step and is amortized over the cadence. Keeping both in
+    the T_eff table is what makes check traffic visible instead of
+    silently inflating the "compute" time of check steps."""
+    m = max(int(check_every), 1)
+    extra = 0.0 if fused else check_bytes / m
+    return a_eff_step + extra
+
+
 def io_counts_from_ir(ir) -> tuple[int, int]:
     """(n_read, n_write) derived from a traced ``repro.ir.StencilIR``
     instead of hand-counting which fields cross HBM — the IR knows which

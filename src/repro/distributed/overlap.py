@@ -80,6 +80,25 @@ def _kernel_geometry(kernel: StencilKernel, fields, scalars,
     return r, depths, ir
 
 
+def finish_reductions(kernel: StencilKernel, reds: Mapping[str, jax.Array],
+                      mesh_axes: Sequence[str]) -> dict[str, jax.Array]:
+    """Finish a kernel's fused reductions across ranks: ONE ``pmax`` /
+    ``psum`` per reduction over the rank-local fused values (which are
+    valid partials — the combines are associative). Rank-local (inside
+    ``shard_map``).
+
+    Ownership contract: ``max``-combine kinds (``max_abs``,
+    ``max_abs_diff``) are exact under the repo's ghost-ring
+    decomposition — ghost cells duplicate neighbor values (or carry an
+    unchanged physical ring whose diff is 0), and duplicates cannot
+    change a max. ``sum``-combine kinds are exact over *disjoint* rank
+    domains; with allocated ghost rings the psum double-counts the
+    overlap, so conserved-quantity sums should be folded on ghost-free
+    shards (or corrected by the caller)."""
+    return {n: kernel.reductions[n].all_reduce(v, mesh_axes)
+            for n, v in reds.items()}
+
+
 def sequential_step(
     kernel: StencilKernel,
     fields: Mapping[str, jax.Array],
@@ -88,12 +107,19 @@ def sequential_step(
     mesh_axes: Sequence[str],
     periodic=False,
 ):
-    """Reference: exchange halos, then update. No overlap."""
+    """Reference: exchange halos, then update. No overlap. A kernel with
+    fused reductions returns ``((outs, reds), fresh)`` with the rank
+    partials already combined across ranks (:func:`finish_reductions`) —
+    the whole convergence check costs one collective scalar."""
     r, depths, _ = _kernel_geometry(kernel, fields, scalars, exchange,
                                     mesh_axes)
     fresh = _halo.exchange_many(fields, exchange, mesh_axes, radius=r,
                                 periodic=periodic, depths=depths)
-    return kernel(**fresh, **scalars), fresh
+    res = kernel(**fresh, **scalars)
+    if kernel.reductions:
+        outs, reds = res
+        res = (outs, finish_reductions(kernel, reds, mesh_axes))
+    return res, fresh
 
 
 def multi_step(
@@ -128,7 +154,11 @@ def multi_step(
     fresh = _halo.exchange_many(fields, exchange, mesh_axes,
                                 radius=nsteps * r, periodic=periodic,
                                 depths=depths)
-    return kernel.run_steps(nsteps, **fresh, **scalars), fresh
+    res = kernel.run_steps(nsteps, **fresh, **scalars)
+    if kernel.reductions:
+        outs, reds = res
+        res = (outs, finish_reductions(kernel, reds, mesh_axes))
+    return res, fresh
 
 
 def overlapped_step(
@@ -153,9 +183,18 @@ def overlapped_step(
     marching mode (``kernel.marched``); the per-face shell re-updates
     stay all-parallel: their slabs are a few cells thick, thinner than a
     plane queue, so the streamed builder would fall back anyway.
+
+    Fused reductions: the bulk launch's partials would fold stale-halo
+    shell cells that the face re-updates are about to overwrite, so the
+    overlapped path runs the reduction-free kernel variants and folds
+    the reductions over the *pasted* outputs instead
+    (``kernel.apply_reductions`` — whole-array jnp folds fused into the
+    surrounding jit, then one :func:`finish_reductions` collective);
+    returns ``((outs, reds), fresh)`` like :func:`sequential_step`.
     """
     r, _, ir = _kernel_geometry(kernel, fields, scalars, exchange,
                                 mesh_axes)
+    plain = kernel.with_reductions(None)
     nd = fields[kernel.outputs[0]].ndim
     single = len(kernel.outputs) == 1
     # Per-axis base extent of the coupled set: staggered fields (shorter by
@@ -184,7 +223,7 @@ def overlapped_step(
     # 2) bulk update with stale halos — correct except the shell ring
     #    (streamed along march_axis when requested: the interior tiles
     #    reuse their plane queues instead of refetching halo windows)
-    bulk_kernel = kernel if march_axis is None else kernel.marched(march_axis)
+    bulk_kernel = plain if march_axis is None else plain.marched(march_axis)
     bulk = as_dict(bulk_kernel(**fields, **scalars))
 
     # 3) recompute the shell per face from fresh slabs and paste. The
@@ -209,7 +248,11 @@ def overlapped_step(
                               off=base[axis] - v.shape[axis])
                 for n, v in fresh.items()
             }
-            slab_out = as_dict(kernel(**slab_fields, **scalars))
+            slab_out = as_dict(plain(**slab_fields, **scalars))
             for o in kernel.outputs:
                 bulk[o] = _paste_shell(bulk[o], slab_out[o], axis, side, r)
-    return (bulk[kernel.outputs[0]] if single else bulk), fresh
+    res = bulk[kernel.outputs[0]] if single else bulk
+    if kernel.reductions:
+        reds = kernel.apply_reductions(bulk, fresh)
+        res = (res, finish_reductions(kernel, reds, mesh_axes))
+    return res, fresh

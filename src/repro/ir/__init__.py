@@ -23,10 +23,12 @@ from .sym import SymArray, TraceError, field as sym_field
 from .trace import StencilIR, trace_stencil
 from .cost import FlopCount, StencilCostModel, count_flops
 from .bc import BoundaryCondition
+from .reductions import Reduction, normalize_reductions
 
 __all__ = [
     "SymArray", "TraceError", "sym_field",
     "StencilIR", "trace_stencil",
     "FlopCount", "StencilCostModel", "count_flops",
     "BoundaryCondition",
+    "Reduction", "normalize_reductions",
 ]

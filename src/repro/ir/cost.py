@@ -111,11 +111,19 @@ class StencilCostModel:
     write_bytes: int                          # exact per-sweep HBM writes
     halo: tuple[tuple[int, int], ...]         # per-axis (lo, hi), one sweep
     field_offsets: tuple[tuple[int, ...], ...]  # staggering of fetched fields
+    check_read_bytes: int = 0                 # one SEPARATE check pass's reads
+    check_flops: FlopCount = FlopCount()      # fused epilogue map + fold
+    n_reductions: int = 0                     # named reductions per launch
 
     @classmethod
     def from_ir(cls, ir: StencilIR, itemsize: int) -> "StencilCostModel":
         rb = sum(math.prod(ir.field_shapes[f]) for f in ir.read_fields)
         wb = sum(math.prod(ir.field_shapes[o]) for o in ir.out_names)
+        # the reduction epilogue's flops: the traced elementwise map plus
+        # one combine op per element for the fold tree
+        cf = count_flops(ir.red_exprs)
+        cf = cf + FlopCount(adds=sum(math.prod(e.shape)
+                                     for e in ir.red_exprs.values()))
         return cls(
             shape=ir.base_shape,
             itemsize=int(itemsize),
@@ -128,12 +136,35 @@ class StencilCostModel:
             # tile/k traffic model must count them all — only a_eff
             # (ideal reuse) restricts to the read set
             field_offsets=tuple(ir.offsets[f] for f in ir.field_shapes),
+            check_read_bytes=ir.check_io_bytes(itemsize),
+            check_flops=cf,
+            n_reductions=len(ir.reductions),
         )
 
     def a_eff_bytes(self, nsteps: int = 1) -> float:
         """Ideal per-step HBM traffic (the paper's A_eff) under k-step
         temporal blocking — derived, not hand-counted."""
         return (self.read_bytes + self.write_bytes) / max(int(nsteps), 1)
+
+    def check_bytes_per_step(self, check_every: int = 1,
+                             fused: bool = True,
+                             tile: Sequence[int] | None = None) -> float:
+        """Per-step HBM traffic of the convergence check, amortized over
+        its cadence (``check_every=m``: one check per m steps).
+
+        ``fused=False`` prices the separate post-pass: every operand
+        field streams in again (``check_read_bytes``). ``fused=True``
+        prices the in-launch epilogue: only the per-tile partials cross
+        HBM — one scalar per tile per reduction — which a ``tile``
+        geometry makes exact and a missing one rounds to zero."""
+        m = max(int(check_every), 1)
+        if not fused:
+            return self.check_read_bytes / m
+        if tile is None or not self.n_reductions:
+            return 0.0
+        n_blocks = math.prod(-(-s // int(b))
+                             for s, b in zip(self.shape, tile))
+        return n_blocks * self.n_reductions * self.itemsize / m
 
     @property
     def intensity(self) -> float:
@@ -142,7 +173,9 @@ class StencilCostModel:
         return self.flops.total() / bytes_ if bytes_ else 0.0
 
     def fetched_bytes_per_step(self, tile: Sequence[int], nsteps: int,
-                               march_axis: int | None = None) -> float:
+                               march_axis: int | None = None,
+                               check_every: int | None = None,
+                               fused_checks: bool = True) -> float:
         """HBM bytes actually moved per time step by the tiled launch:
         every block fetches its (overlapping) halo-extended windows and
         writes its output block; a k-fused launch amortizes both over k
@@ -155,7 +188,17 @@ class StencilCostModel:
         halo planes riding in the scratch queue instead of being
         refetched. This is the model that makes temporal blocking and
         streaming composable in the autotuner: deep ``k*r`` halos stop
-        multiplying the traffic along the marched axis."""
+        multiplying the traffic along the marched axis.
+
+        ``check_every=m`` adds the convergence-check traffic at its
+        cadence (:meth:`check_bytes_per_step`): the fused epilogue costs
+        ~one partial per tile, the separate post-pass re-reads every
+        operand field — the honest accounting that keeps a checked
+        solver's T_eff table from hiding its norm passes."""
+        check = 0.0
+        if check_every is not None:
+            check = self.check_bytes_per_step(check_every, fused_checks,
+                                              tile)
         k = max(int(nsteps), 1)
         tile = tuple(int(b) for b in tile)
         nd = len(tile)
@@ -167,7 +210,7 @@ class StencilCostModel:
                           for b, (lo, hi), o in zip(tile, self.halo, off))
                 for off in offs
             ) * self.itemsize
-            return (n_blocks * win + self.write_bytes) / k
+            return (n_blocks * win + self.write_bytes) / k + check
         m = int(march_axis)
         bm = tile[m]
         lhi = -(-k * self.halo[m][1] // bm)
@@ -180,7 +223,7 @@ class StencilCostModel:
                 for a in range(nd) if a != m)
             for off in offs
         ) * self.itemsize
-        return (n_cols * win + self.write_bytes) / k
+        return (n_cols * win + self.write_bytes) / k + check
 
     def a_eff_streamed(self, tile: Sequence[int], nsteps: int = 1,
                        march_axis: int = 0) -> float:
@@ -202,14 +245,22 @@ class StencilCostModel:
         return self.fetched_bytes_per_step(tile, nsteps, march_axis)
 
     def predict_per_step_s(self, tile: Sequence[int], nsteps: int,
-                           hw, march_axis: int | None = None) -> float:
+                           hw, march_axis: int | None = None,
+                           check_every: int | None = None,
+                           fused_checks: bool = True) -> float:
         """Roofline-style per-step runtime prediction for one
         (tile, k, march_axis) candidate on ``hw`` (a ``teff.HardwareSpec``):
         max of the memory term (fetched windows — streamed traffic when
-        marching) and the compute term inflated by the redundant
-        halo-cone work of temporal blocking."""
+        marching, plus check traffic at its cadence) and the compute term
+        inflated by the redundant halo-cone work of temporal blocking
+        (plus the amortized check flops)."""
         k = max(int(nsteps), 1)
-        t_mem = self.fetched_bytes_per_step(tile, k, march_axis) / hw.peak_bw
+        t_mem = self.fetched_bytes_per_step(
+            tile, k, march_axis, check_every=check_every,
+            fused_checks=fused_checks) / hw.peak_bw
         overhead = halo_compute_overhead(tile, self.halo, k)
-        t_comp = self.flops.total() * (1.0 + overhead) / hw.peak_flops
+        flops = self.flops.total() * (1.0 + overhead)
+        if check_every is not None:
+            flops += self.check_flops.total() / max(int(check_every), 1)
+        t_comp = flops / hw.peak_flops
         return max(t_mem, t_comp)

@@ -38,7 +38,7 @@ class TraceError(ValueError):
 Interval = tuple[int, int]
 Reads = Mapping[str, tuple[Interval, ...]]
 
-_FLOPS = {"add": "adds", "sub": "adds", "neg": "adds",
+_FLOPS = {"add": "adds", "sub": "adds", "neg": "adds", "abs": "adds",
           "mul": "muls", "div": "divs", "pow": "pows"}
 
 
@@ -192,6 +192,11 @@ class SymArray:
 
     def __neg__(self):
         return SymArray("neg", self.shape, self.reads, (self,))
+
+    def __abs__(self):
+        # |.| is what the reduction epilogues (max_abs, max_abs_diff)
+        # trace through; counted with the adds (sign ops are ~free).
+        return SymArray("abs", self.shape, self.reads, (self,))
 
     def __pos__(self):
         return self

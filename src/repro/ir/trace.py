@@ -23,6 +23,7 @@ import dataclasses
 from typing import Callable, Mapping, Sequence
 
 from . import sym
+from .reductions import Reduction, normalize_reductions
 from .sym import SymArray, TraceError
 
 __all__ = ["StencilIR", "trace_stencil"]
@@ -44,6 +45,8 @@ class StencilIR:
     halo: tuple[tuple[int, int], ...]             # system window halo
     inferred_radius: int
     exprs: dict[str, SymArray] = dataclasses.field(repr=False, default_factory=dict)
+    reductions: dict[str, Reduction] = dataclasses.field(default_factory=dict)
+    red_exprs: dict[str, SymArray] = dataclasses.field(repr=False, default_factory=dict)
 
     @property
     def ndim(self) -> int:
@@ -61,6 +64,30 @@ class StencilIR:
         """(n_read, n_write): the paper's A_eff field counting, derived
         instead of hand-supplied."""
         return len(self.read_fields), len(self.out_names)
+
+    @property
+    def check_read_fields(self) -> tuple[str, ...]:
+        """Fields a SEPARATE check pass would have to re-read from HBM:
+        every reduction operand (outputs were just written, inputs were
+        just read — a post-pass pays for both again). The fused epilogue
+        reads none of them a second time; this set prices the traffic
+        the fusion eliminates."""
+        seen: list[str] = []
+        for r in self.reductions.values():
+            for op in r.operands:
+                if op not in seen:
+                    seen.append(op)
+        return tuple(seen)
+
+    def check_io_bytes(self, itemsize: int) -> int:
+        """HBM bytes of one separate (unfused) check pass: each operand
+        field streams in once. The fused epilogue's extra traffic is the
+        per-tile partials write — O(n_blocks), negligible — so this is
+        the per-check saving of ``reductions=``."""
+        import math
+
+        return sum(math.prod(self.field_shapes[f])
+                   for f in self.check_read_fields) * itemsize
 
     def io_bytes(self, itemsize: int) -> int:
         """Exact bytes that must cross HBM per step under perfect reuse:
@@ -90,6 +117,8 @@ class StencilIR:
         for f, d in sorted(self.field_halo.items()):
             if any(x or y for x, y in d):
                 lines.append(f"  exchange depth {f}: {d}")
+        for n, r in sorted(self.reductions.items()):
+            lines.append(f"  reduction {n}: {r.describe()}")
         return "\n".join(lines)
 
 
@@ -107,6 +136,7 @@ def trace_stencil(
     field_shapes: Mapping[str, Sequence[int]],
     out_names: Sequence[str],
     scalar_names: Sequence[str] = (),
+    reductions: Mapping[str, object] | None = None,
 ) -> StencilIR:
     """Abstractly evaluate ``update_fn(fields, scalars)`` once.
 
@@ -115,9 +145,16 @@ def trace_stencil(
     the neutral value 1.0 — value-dependent control flow inside an update
     function is untraceable by design (it would not be a stencil).
 
+    ``reductions`` declares the launch's fused reduction epilogues
+    (``{name: Reduction | "kind(field[, other])"}``): operands are
+    validated against the field set (collocated fields only) and each
+    check's elementwise map is traced into ``red_exprs`` — the cost
+    model then prices check flops exactly and check *traffic* at what a
+    separate pass would pay (``check_io_bytes``).
+
     Raises :class:`TraceError` for untraceable constructs and plain
     ``ValueError`` for genuinely invalid kernels (bad write extents,
-    interior writes on staggered axes).
+    interior writes on staggered axes, staggered reduction operands).
     """
     shapes = {n: tuple(int(x) for x in s) for n, s in field_shapes.items()}
     if not shapes:
@@ -193,6 +230,19 @@ def trace_stencil(
     for rings in write_rings.values():
         r_inf = max(r_inf, *rings)
 
+    reds = normalize_reductions(reductions, tuple(shapes))
+    red_exprs: dict[str, SymArray] = {}
+    for name, r in reds.items():
+        for op in r.operands:
+            if any(offsets[op]):
+                raise ValueError(
+                    f"reduction {name!r} = {r.describe()} reads staggered "
+                    f"field {op!r} (offsets {offsets[op]}); reduction "
+                    "operands must be collocated with the base grid"
+                )
+        ops = [sym.field(op, shapes[op]) for op in r.operands]
+        red_exprs[name] = r.map_element(*ops)
+
     return StencilIR(
         base_shape=base,
         field_shapes=shapes,
@@ -206,4 +256,6 @@ def trace_stencil(
         halo=halo,
         inferred_radius=r_inf,
         exprs={o: updates[o] for o in out_names},
+        reductions=reds,
+        red_exprs=red_exprs,
     )

@@ -55,11 +55,13 @@ class TuneResult:
 
 _CACHE: dict[tuple, TuneResult] = {}
 
-# Persistent-cache schema version. v2 adds the engine-geometry fields
-# (march axis candidates, per-axis halos) to the key: launches cached by
-# older binaries may be invalid for the streamed geometry, so files
-# without a matching version are IGNORED (re-tuned), never trusted.
-CACHE_VERSION = 2
+# Persistent-cache schema version. v2 added the engine-geometry fields
+# (march axis candidates, per-axis halos) to the key; v3 adds the check
+# workload (fused reduction set + cadence). Launches cached by older
+# binaries carry shorter keys that can never match (and would price a
+# checked solver off a plain sweep), so files without a matching version
+# are IGNORED (re-tuned), never trusted.
+CACHE_VERSION = 3
 
 
 def _divisors(n: int) -> list[int]:
@@ -113,7 +115,9 @@ def cache_key(shape, dtype, radius: int, n_fields: int, tag: str = "",
               field_offsets: Sequence[Sequence[int]] | None = None,
               prune: tuple | None = None,
               march_candidates: Sequence[int | None] | None = None,
-              halos: Sequence[tuple[int, int]] | None = None) -> tuple:
+              halos: Sequence[tuple[int, int]] | None = None,
+              reductions: Sequence[str] | None = None,
+              check_every: int | None = None) -> tuple:
     """Memo key covers the full search space: a call with a different
     candidate set must re-tune, not inherit another sweep's winner. The
     coupled field set's staggering (``field_offsets``) is part of the key:
@@ -124,7 +128,11 @@ def cache_key(shape, dtype, radius: int, n_fields: int, tag: str = "",
     ``march_candidates`` (streaming axes in the search space) and
     ``halos`` (per-axis (lo, hi) window depths) — key the launch
     geometry itself: a winner tuned for refetched halo windows must not
-    be handed to a streamed-queue launch or vice versa."""
+    be handed to a streamed-queue launch or vice versa. ``reductions``
+    (the fused epilogue set, e.g. ``r.describe()`` strings) and
+    ``check_every`` key the check workload: a winner tuned for a plain
+    sweep must not be handed to a checked solver whose epilogue shifts
+    the tile economics."""
     return (tag, tuple(int(s) for s in shape), jnp.dtype(dtype).name,
             int(radius), int(n_fields),
             tuple(int(k) for k in nsteps_candidates),
@@ -137,7 +145,10 @@ def cache_key(shape, dtype, radius: int, n_fields: int, tag: str = "",
             None if march_candidates is None else tuple(
                 None if m is None else int(m) for m in march_candidates),
             None if halos is None else tuple(
-                (int(lo), int(hi)) for lo, hi in halos))
+                (int(lo), int(hi)) for lo, hi in halos),
+            None if reductions is None else tuple(sorted(
+                str(r) for r in reductions)),
+            None if check_every is None else int(check_every))
 
 
 def autotune(
@@ -160,9 +171,18 @@ def autotune(
     prune_ratio: float = 2.0,
     march_candidates: Sequence[int | None] | None = None,
     halos: Sequence[tuple[int, int]] | None = None,
+    reductions: Sequence[str] | None = None,
+    check_every: int | None = None,
 ) -> TuneResult:
     """Find the fastest (tile, nsteps[, march_axis]) for a stencil
     problem class.
+
+    ``reductions`` (epilogue descriptions, e.g.
+    ``[r.describe() for r in kernel.reductions.values()]``) and
+    ``check_every`` key the cached winner to the check workload, and the
+    analytic pruner prices the check's amortized flops and traffic
+    (``cost_model.predict_per_step_s(..., check_every=)``) so a checked
+    solver never inherits a plain sweep's winner.
 
     ``make_step(tile, nsteps)`` must return a zero-arg callable advancing
     ``nsteps`` time steps with that configuration (typically a jit'd
@@ -193,7 +213,7 @@ def autotune(
                  else (getattr(hw, "name", "hw"), float(prune_ratio)))
     key = cache_key(shape, dtype, radius, n_fields, tag, nsteps_candidates,
                     tiles, vmem_budget, field_offsets, prune_tag,
-                    march_candidates, halos)
+                    march_candidates, halos, reductions, check_every)
     if key in _CACHE:
         return _CACHE[key]
     if cache_path and os.path.exists(cache_path):
@@ -238,7 +258,8 @@ def autotune(
                 cands.append((tile, k, march))
     pruned = 0
     if prune_tag is not None and len(cands) > 1:
-        preds = {c: cost_model.predict_per_step_s(c[0], c[1], hw, c[2])
+        preds = {c: cost_model.predict_per_step_s(c[0], c[1], hw, c[2],
+                                                  check_every=check_every)
                  for c in cands}
         best_pred = min(preds.values())
         survivors = [c for c in cands if preds[c] <= prune_ratio * best_pred]

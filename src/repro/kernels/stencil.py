@@ -74,6 +74,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..ir.reductions import normalize_reductions as _normalize_reductions
+
 # Default VMEM working-set budget per kernel instance. v5e has 128 MiB of
 # VMEM per core; leave generous headroom for Pallas pipelining (double
 # buffering doubles the live window set) and spills.
@@ -541,6 +543,7 @@ def build_stencil_call(
     bc: Mapping[str, object] | None = None,
     march_axis: int | None = None,
     write_rings: Sequence[int] | None = None,
+    reductions: Mapping[str, object] | None = None,
 ) -> Callable[..., dict[str, jax.Array]]:
     """Build a fused Pallas stencil step (or a k-step temporal block).
 
@@ -586,6 +589,22 @@ def build_stencil_call(
     Fields staggered along the march axis are unsupported (ValueError);
     a march extent smaller than the queue falls back to the all-parallel
     path (``run.march_fallback``).
+
+    Reductions (``reductions={name: ir.Reduction | "kind(field[, other])"}``):
+    named convergence/conservation checks (``max_abs``, ``max_abs_diff``,
+    ``sum``, ``sum_sq``) computed INSIDE the launch. Each grid tile folds
+    its domain-masked partial over the out-block frame — output operands
+    see the freshly blended values, input operands the current window —
+    into a tiny per-tile partials output (one scalar per tile, written
+    through the same lagged index map on the streamed path, so sequential
+    march steps land their partials per written block and the drain
+    flushes the tail), and ``run`` finishes with a scalar combine over
+    the partials: no operand crosses HBM a second time. ``run`` then
+    returns ``(outputs, reductions)``. With ``nsteps=k`` only the final
+    sweep reduces (the k-step value — what a sequential checker sees).
+    Operands must be collocated fields; periodic BCs are incompatible
+    (their wrap scatter happens after the launch, so an in-launch fold
+    would see pre-wrap face values).
     """
     shape = tuple(int(s) for s in shape)
     nd = len(shape)
@@ -602,9 +621,26 @@ def build_stencil_call(
                 f"output {o!r} must also be an input field (boundary-copy source)"
             )
     shapes, offsets = field_geometry(shape, field_names, field_shapes, radius)
+    reductions = _normalize_reductions(reductions, field_names)
+    red_names = tuple(reductions)
+    for rn, r in reductions.items():
+        for op in r.operands:
+            if any(b - s for b, s in zip(shape, shapes[op])):
+                raise ValueError(
+                    f"reduction {rn!r} = {r.describe()} reads staggered "
+                    f"field {op!r} (shape {shapes[op]} vs base {shape}); "
+                    "reduction operands must be collocated"
+                )
     bc = dict(bc or {})
     inkernel_bc = {o: c for o, c in bc.items() if c.kind != "periodic"}
     post_bc = {o: c for o, c in bc.items() if c.kind == "periodic"}
+    if reductions and post_bc:
+        raise ValueError(
+            "fused reductions cannot ride a launch with periodic boundary "
+            "conditions: the wrap scatter runs after the launch, so the "
+            "in-kernel fold would see pre-wrap face values — apply the "
+            "reduction as a post-pass or use dirichlet/neumann0"
+        )
     if post_bc and nsteps > 1:
         raise ValueError(
             "periodic boundary conditions cannot run inside a temporally-"
@@ -753,11 +789,14 @@ def build_stencil_call(
         if missing:
             raise ValueError(f"update_fn did not produce outputs {missing}")
 
+    n_out = len(out_names)
+
     def body(*refs):
         scal_refs = refs[:n_s]
         in_refs = refs[n_s : n_s + n_f]
-        out_refs = refs[n_s + n_f : n_s + n_f + len(out_names)]
-        q_refs = refs[n_s + n_f + len(out_names) :]
+        out_refs = refs[n_s + n_f : n_s + n_f + n_out]
+        red_refs = refs[n_s + n_f + n_out : n_s + n_f + n_out + len(red_names)]
+        q_refs = refs[n_s + n_f + n_out + len(red_names) :]
         scalars = {n: ref[0] for n, ref in zip(scalar_names, scal_refs)}
         if march is None:
             pids = None
@@ -826,6 +865,7 @@ def build_stencil_call(
                 windows[tgt] = blended
         updates = update_fn(windows, scalars)
         _check_updates(updates)
+        blendeds = {}
         for o, oref in zip(out_names, out_refs):
             modes, rings = write_geometry(
                 updates[o].shape, windows[o].shape, offsets[o], o, ring)
@@ -842,6 +882,28 @@ def build_stencil_call(
                                       shapes[o], block, ((0, 0),) * nd,
                                       dtype, pids)
             oref[...] = blended
+            blendeds[o] = blended
+        # Fused reduction epilogue: fold each named check over the SAME
+        # out-block frame the write just produced — output operands are
+        # the blended values still live in registers/VMEM, input operands
+        # the window's block slice (the value the boundary copy reads) —
+        # masked to the operand's in-domain cells (each domain cell lies
+        # in exactly one out block, so the per-tile partials tile the
+        # whole-array reduction without overlap).
+        if red_names:
+            def frame_value(f):
+                if f in blendeds:
+                    return blendeds[f]
+                return _embed(windows[f], block,
+                              tuple(-lo for lo, _ in sweep_halo))
+
+            dom = _valid_mask(block, shape, (0,) * nd, (0,) * nd,
+                              ("all",) * nd, (0,) * nd, pids)
+            for rn, rref in zip(red_names, red_refs):
+                r = reductions[rn]
+                mapped = r.map_element(*[frame_value(op)
+                                         for op in r.operands])
+                rref[...] = r.fold(mapped, dom).reshape((1,) * nd)
 
     # The march-axis fetch window carries no halo (streaming fetches new
     # planes only; the halo planes are carried in the scratch queue).
@@ -857,9 +919,13 @@ def build_stencil_call(
         for n in field_names
     ]
     # Outputs are stored at the base extent (blocks tile it exactly) and
-    # cropped back to their staggered extents on the way out.
+    # cropped back to their staggered extents on the way out. Reduction
+    # partials ride as one-scalar-per-tile outputs through the same
+    # (lagged, on the streamed path) block index map.
     out_specs = [pl.BlockSpec(block, out_index_map) for _ in out_names]
     out_shape = [jax.ShapeDtypeStruct(shape, dtype) for _ in out_names]
+    out_specs += [pl.BlockSpec((1,) * nd, out_index_map) for _ in red_names]
+    out_shape += [jax.ShapeDtypeStruct(grid, dtype) for _ in red_names]
 
     kwargs = {}
     if march is not None and q_blocks > 1:
@@ -883,8 +949,8 @@ def build_stencil_call(
         body,
         grid=launch_grid,
         in_specs=in_specs,
-        out_specs=out_specs[0] if len(out_names) == 1 else out_specs,
-        out_shape=out_shape[0] if len(out_names) == 1 else out_shape,
+        out_specs=out_specs[0] if len(out_specs) == 1 else out_specs,
+        out_shape=out_shape[0] if len(out_shape) == 1 else out_shape,
         interpret=interpret,
         **kwargs,
     )
@@ -900,11 +966,13 @@ def build_stencil_call(
                     f"field {n!r} has shape {f.shape}, expected {shapes[n]}"
                 )
         outs = call(*ordered_scal, *ordered_fields)
-        if len(out_names) == 1:
+        if n_out + len(red_names) == 1:
             outs = [outs]
+        outs = list(outs)
+        partials = outs[n_out:]
         outs = [
             o[tuple(slice(0, s) for s in shapes[n])] if shapes[n] != shape else o
-            for n, o in zip(out_names, outs)
+            for n, o in zip(out_names, outs[:n_out])
         ]
         outs = dict(zip(out_names, outs))
         # Periodic faces wrap across the whole domain — realized as a
@@ -912,11 +980,18 @@ def build_stencil_call(
         # O(N^(d-1) * depth) cells; no extra whole-array HBM round-trip).
         for o, c in post_bc.items():
             outs[o] = c.apply(outs[o])
-        return outs
+        if not red_names:
+            return outs
+        # Finish each reduction with a scalar combine over its per-tile
+        # partials (O(n_blocks) values — fused into the surrounding jit).
+        reds = {rn: reductions[rn].finish(p)
+                for rn, p in zip(red_names, partials)}
+        return outs, reds
 
     run.grid = grid
     run.block = block
     run.nsteps = nsteps
+    run.reductions = dict(reductions)
     run.field_shapes = dict(shapes)
     run.halo = sweep_halo
     run.march_axis = march
