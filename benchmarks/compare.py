@@ -187,7 +187,8 @@ def scan_group(dirname: str, pattern: str, threshold: float) -> list[str]:
     return failures
 
 
-DEFAULT_PATTERNS = ("BENCH_teff*.json", "BENCH_solvers*.json")
+DEFAULT_PATTERNS = ("BENCH_teff*.json", "BENCH_solvers*.json",
+                    "BENCH_scaling*.json")
 
 
 def main(argv=None) -> int:

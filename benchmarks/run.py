@@ -70,7 +70,7 @@ def main():
     if not args.skip_scaling:
         print("# --- paper S3: weak scaling w/ hidden communication ---")
         from benchmarks import bench_scaling
-        bench_scaling.main()
+        bench_scaling.main(["--quick"] if args.quick else [])
 
     print("# --- roofline: dry-run derived ---")
     roofline_summary()

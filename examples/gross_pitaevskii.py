@@ -56,6 +56,9 @@ class GPConfig:
     interpret: bool | None = None
     tol: float | None = None   # mass-drift tripwire (None: fixed nt)
     check_every: int = 10      # drift cadence in --tol mode
+    checkpoint_dir: str | None = None
+    save_every: int = 10       # checkpoint cadence, in checks
+    resume: bool = True
 
 
 def boundary_conditions(cfg: GPConfig) -> dict | None:
@@ -187,11 +190,19 @@ def solve_guarded(cfg: GPConfig) -> dict:
     def drift_of(reds):
         return jnp.abs((reds["m_re"] + reds["m_im"]) - mass0) / mass0
 
+    ckpt = None
+    if cfg.checkpoint_dir is not None:
+        ckpt = iterate.Checkpointing(cfg.checkpoint_dir,
+                                     save_every=cfg.save_every,
+                                     resume=cfg.resume)
     res = iterate.solve_until(
         rkern, dict(re2=re, im2=im, re=re, im=im, V=V),
         dict(g=cfg.g, dt=dt, _dx2=inv2[0], _dy2=inv2[1], _dz2=inv2[2]),
         tol=cfg.tol, max_iters=cfg.nt, check_every=cfg.check_every,
-        error=drift_of, until="above")
+        error=drift_of, until="above", checkpoint=ckpt)
+    if res.resumed_from is not None:
+        print(f"GP: resumed from checkpoint step {res.resumed_from} "
+              f"in {cfg.checkpoint_dir}")
     re, im = res.fields["re"], res.fields["im"]
     mass = float(res.reds["m_re"] + res.reds["m_im"])
     return {"grid": grid, "re": re, "im": im, "V": V,
@@ -233,10 +244,25 @@ def main(argv=None):
                          "zero host syncs); --nt becomes the step cap")
     ap.add_argument("--check-every", type=int, default=10,
                     help="drift cadence (steps per check) in --tol mode")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="directory for atomic async checkpoints of the "
+                         "--tol guarded run (restartable: see --resume)")
+    ap.add_argument("--save-every", type=int, default=10,
+                    help="checkpoint cadence in CHECKS (default 10)")
+    ap.add_argument("--resume", dest="resume", action="store_true",
+                    default=True,
+                    help="resume from the LATEST checkpoint (default)")
+    ap.add_argument("--no-resume", dest="resume", action="store_false",
+                    help="ignore existing checkpoints; start fresh")
     args = ap.parse_args(argv)
+    if args.checkpoint_dir is not None and args.tol is None:
+        ap.error("--checkpoint-dir requires --tol (checkpoints ride the "
+                 "drift-guarded solve loop)")
     cfg = GPConfig(n=args.n, nt=args.nt, g=args.g, backend=args.backend,
                    fused=not args.two_launch, bc=args.bc, tol=args.tol,
-                   check_every=args.check_every)
+                   check_every=args.check_every,
+                   checkpoint_dir=args.checkpoint_dir,
+                   save_every=args.save_every, resume=args.resume)
     r = solve(cfg)
     print(f"GP: {r['iters']} steps on {r['grid'].shape} [{cfg.backend}"
           f"{'/fused' if cfg.fused else '/two-launch'}] "

@@ -65,6 +65,9 @@ class PorosityConfig:
     interpret: bool | None = None
     tol: float | None = None   # steady-state residual (None: fixed nt)
     check_every: int = 10      # residual cadence in --tol mode
+    checkpoint_dir: str | None = None  # survivable --tol solves
+    save_every: int = 10       # checks between checkpoints
+    resume: bool = True        # restore from LATEST when present
 
 
 def boundary_conditions(cfg: PorosityConfig) -> dict | None:
@@ -197,9 +200,21 @@ def solve_steady(cfg: PorosityConfig, grid: Grid, phi, Pe) -> tuple:
     dtau = timestep(cfg, grid)
     kern = make_step(grid, cfg).kernels[0]
     rkern = kern.with_reductions({"err": "max_abs_diff(Pe2, Pe)"})
+    ckpt = None
+    if cfg.checkpoint_dir is not None:
+        # survivable solve: async atomic checkpoints of the carry every
+        # save_every checks; a killed run restarted with the same flags
+        # resumes from LATEST (see README "Fault tolerance")
+        ckpt = iterate.Checkpointing(cfg.checkpoint_dir,
+                                     save_every=cfg.save_every,
+                                     resume=cfg.resume)
     res = iterate.solve_until(
         rkern, dict(phi2=phi, Pe2=Pe, phi=phi, Pe=Pe), dict(dtau=dtau),
-        tol=cfg.tol, max_iters=cfg.nt, check_every=cfg.check_every)
+        tol=cfg.tol, max_iters=cfg.nt, check_every=cfg.check_every,
+        checkpoint=ckpt)
+    if res.resumed_from is not None:
+        print(f"porosity wave: resumed from checkpoint step "
+              f"{res.resumed_from} in {cfg.checkpoint_dir}")
     # rotation targets hold the newest state after the in-loop rotation
     return res.fields["phi"], res.fields["Pe"], int(res.iters), \
         float(res.err)
@@ -255,11 +270,28 @@ def main(argv=None):
                          "--nt becomes the iteration cap")
     ap.add_argument("--check-every", type=int, default=10,
                     help="residual cadence (steps per check) in --tol mode")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="directory for atomic async checkpoints of the "
+                         "--tol solve (restartable: see --resume)")
+    ap.add_argument("--save-every", type=int, default=10,
+                    help="checkpoint cadence in CHECKS (default 10: one "
+                         "save per 10 residual checks)")
+    ap.add_argument("--resume", dest="resume", action="store_true",
+                    default=True,
+                    help="resume from the LATEST checkpoint when one "
+                         "exists (default)")
+    ap.add_argument("--no-resume", dest="resume", action="store_false",
+                    help="ignore existing checkpoints; start fresh")
     args = ap.parse_args(argv)
+    if args.checkpoint_dir is not None and args.tol is None:
+        ap.error("--checkpoint-dir requires --tol (checkpoints ride the "
+                 "convergence-driven solve loop)")
     cfg = PorosityConfig(n=args.n, nt=args.nt, npow=args.npow,
                          backend=args.backend, flux_split=args.flux_split,
                          bc=args.bc, tol=args.tol,
-                         check_every=args.check_every)
+                         check_every=args.check_every,
+                         checkpoint_dir=args.checkpoint_dir,
+                         save_every=args.save_every, resume=args.resume)
     r = solve(cfg)
     steps = (f"{r['iters']} steps (tol={cfg.tol:g}, "
              f"residual={r['residual']:.2e})" if cfg.tol is not None

@@ -1,2 +1,3 @@
-from .manager import CheckpointManager
-__all__ = ["CheckpointManager"]
+from .manager import CheckpointError, CheckpointManager
+
+__all__ = ["CheckpointError", "CheckpointManager"]

@@ -3,12 +3,12 @@ from .grid import Grid
 from .fields import FieldSet, VectorField
 from .fd import fd1d, fd2d, fd3d
 from .parallel import ParallelStencil, StencilKernel, init_parallel_stencil
-from .iterate import SolveResult, make_solver, solve_until
+from .iterate import Checkpointing, SolveResult, make_solver, solve_until
 from . import boundary, teff
 
 __all__ = [
     "Grid", "FieldSet", "VectorField", "fd1d", "fd2d", "fd3d",
     "ParallelStencil", "StencilKernel", "init_parallel_stencil",
-    "SolveResult", "make_solver", "solve_until",
+    "Checkpointing", "SolveResult", "make_solver", "solve_until",
     "boundary", "teff",
 ]

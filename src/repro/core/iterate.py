@@ -23,16 +23,64 @@ Caveat: a ``while_loop`` has data-dependent trip count, so the program
 cannot be reverse-differentiated and steps are taken in multiples of
 ``check_every`` (``iters`` may overshoot ``max_iters`` by at most
 ``check_every - 1``).
+
+Fault tolerance (``checkpoint=``): the paper's headline workloads run
+for days, and at that scale runs die to preemption, not math. The
+checkpointing driver chunks the same jitted ``while_loop`` at
+reduction-check boundaries — each chunk is ``save_every`` checks — and
+hands the double-buffer carry (field buffers + iteration counter +
+error scalar + last reductions) to an async
+:class:`~repro.checkpoint.manager.CheckpointManager` between chunks.
+The loop only stalls for the device->host copy; the filesystem write
+runs behind the next chunk. Checkpoints are atomic (``step_X.tmp`` +
+``os.replace`` + ``LATEST`` swap) with keep-k retention, and a killed
+run resumes from ``LATEST`` bit-identically to the uninterrupted run
+on the same machine (per-step math never sees the chunk boundary; only
+cross-mesh/cross-program comparisons degrade to allclose — reductions
+reassociate).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Mapping
+import time
+from typing import Any, Callable, Mapping, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["SolveResult", "make_solver", "solve_until"]
+__all__ = ["Checkpointing", "SolveResult", "make_solver", "solve_until"]
+
+
+@dataclasses.dataclass
+class Checkpointing:
+    """Checkpoint policy for :func:`solve_until`.
+
+    ``path`` is the checkpoint root directory (or an existing
+    :class:`~repro.checkpoint.manager.CheckpointManager`). ``save_every``
+    counts reduction CHECKS between saves — the snapshot piggybacks on a
+    check boundary, so it never costs an extra HBM pass; per-step
+    overhead is the device->host copy amortized over
+    ``save_every * check_every`` steps. ``resume=True`` restores from
+    ``LATEST`` when one exists (a fresh directory starts from the given
+    initial fields). ``blocking=False`` writes on a background thread.
+    ``monitor`` (a :class:`~repro.distributed.fault.StepMonitor`) bumps
+    a heartbeat file per chunk and raises
+    :class:`~repro.distributed.fault.RankFailure` when a peer's
+    heartbeat goes stale."""
+
+    path: Union[str, Any]          # root dir or CheckpointManager
+    save_every: int = 1            # checks between saves
+    keep: int = 3
+    resume: bool = True
+    blocking: bool = False
+    monitor: Optional[Any] = None  # fault.StepMonitor
+
+    def manager(self):
+        from ..checkpoint import CheckpointManager
+
+        if isinstance(self.path, str):
+            return CheckpointManager(self.path, keep=self.keep)
+        return self.path
 
 
 @dataclasses.dataclass
@@ -45,6 +93,8 @@ class SolveResult:
     reds: dict[str, jax.Array]     # the last check's fused reductions
     err: jax.Array                 # last error scalar (float32)
     iters: jax.Array               # steps taken (int32)
+    resumed_from: Optional[int] = None   # checkpoint step a resume started at
+    saved_steps: tuple[int, ...] = ()    # steps checkpointed this run
 
     def output(self, kernel) -> Any:
         """The solver's answer: the rotation target of each output holds
@@ -150,6 +200,79 @@ def make_solver(
     return solver
 
 
+def _crossed(err: float, tol: float, until: str) -> bool:
+    """Host-side mirror of the while_loop's stop test."""
+    return err <= tol if until == "below" else err > tol
+
+
+def _solve_checkpointed(
+    kernel, fields, scalars, *, tol, max_iters, check_every, error, until,
+    ckpt: Checkpointing,
+) -> SolveResult:
+    """The chunked driver behind ``solve_until(checkpoint=...)``.
+
+    Each chunk is the SAME jitted while_loop as the plain path, capped
+    at ``save_every`` checks — per-step math never sees the chunk
+    boundary, so a run killed between chunks resumes from ``LATEST``
+    bit-identically to the uninterrupted run. Between chunks the carry
+    is handed to the (async) checkpoint writer and the FaultPlan /
+    heartbeat hooks fire; those are the run's only host syncs."""
+    from ..distributed import fault
+
+    mgr = ckpt.manager()
+    save_every = int(ckpt.save_every)
+    if save_every < 1:
+        raise ValueError(f"save_every must be >= 1, got {save_every}")
+    solver = jax.jit(make_solver(kernel, scalars, check_every=check_every,
+                                 error=error, until=until))
+    block = save_every * check_every
+    cur = dict(fields)
+    reds = {n: jnp.zeros((), jnp.float32) for n in kernel.reductions}
+    err = jnp.float32(jnp.inf if until == "below" else -jnp.inf)
+    done, resumed_from = 0, None
+
+    if ckpt.resume and mgr.latest_step() is not None:
+        like = {"fields": cur, "reds": reds, "err": err}
+        tree, extra = mgr.restore(like)
+        cur, reds, err = tree["fields"], tree["reds"], tree["err"]
+        done = int(extra.get("iters", extra["step"]))
+        resumed_from = done
+
+    plan = fault.FaultPlan.active()
+    monitor = ckpt.monitor
+    saved: list[int] = []
+    converged = done > 0 and _crossed(float(err), tol, until)
+    while not converged and done < max_iters:
+        take = min(block, max_iters - done)
+        t0 = time.perf_counter()
+        cur, reds, err, it = solver(cur, tol, take)
+        n = int(it)                      # chunk-boundary host sync
+        dt = time.perf_counter() - t0
+        done += n
+        converged = _crossed(float(err), tol, until)
+        if monitor is not None:
+            monitor.record(done, dt / max(n, 1))
+            health = monitor.check_peers()
+            if health["dead"]:
+                mgr.wait()
+                raise fault.RankFailure(health["dead"])
+        # async: stalls only for the device->host snapshot; the write
+        # overlaps the next chunk's device work
+        mgr.save(done, {"fields": cur, "reds": reds, "err": err},
+                 blocking=ckpt.blocking,
+                 extra={"iters": done, "err": float(err), "tol": float(tol),
+                        "check_every": int(check_every),
+                        "save_every": save_every, "until": until,
+                        "converged": converged})
+        saved.append(done)
+        if plan is not None:
+            plan.on_step(done)   # a kill lands between save and next chunk
+    mgr.wait()                           # surface async write failures
+    return SolveResult(fields=cur, reds=reds, err=err,
+                       iters=jnp.int32(done), resumed_from=resumed_from,
+                       saved_steps=tuple(saved))
+
+
 def solve_until(
     kernel,
     fields: Mapping[str, Any],
@@ -160,6 +283,7 @@ def solve_until(
     check_every: int = 1,
     error: str | Callable | None = None,
     until: str = "below",
+    checkpoint: Union[Checkpointing, str, None] = None,
 ) -> SolveResult:
     """Iterate ``kernel`` on device until its fused error scalar crosses
     ``tol`` (or ``max_iters`` steps), checking every ``check_every``
@@ -172,7 +296,20 @@ def solve_until(
     (default: the single declared reduction) or a callable over the
     reduction dict (e.g. a relative-drift formula); it must be cheap —
     it runs inside the loop condition's body on device.
+
+    ``checkpoint`` (a directory path or :class:`Checkpointing`) makes
+    the solve survivable: the loop is chunked at check boundaries, the
+    carry is checkpointed asynchronously every ``save_every`` checks,
+    and an interrupted run restarted with the same arguments resumes
+    from the last atomic checkpoint (see :class:`Checkpointing`).
     """
+    if checkpoint is not None:
+        if isinstance(checkpoint, str):
+            checkpoint = Checkpointing(checkpoint)
+        return _solve_checkpointed(
+            kernel, dict(fields), scalars, tol=tol, max_iters=max_iters,
+            check_every=check_every, error=error, until=until,
+            ckpt=checkpoint)
     solver = jax.jit(make_solver(kernel, scalars, check_every=check_every,
                                  error=error, until=until))
     cur, reds, err, iters = solver(dict(fields), tol, max_iters)

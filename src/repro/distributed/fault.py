@@ -14,15 +14,52 @@ Pieces that run *around* the jitted step (host-side control plane):
     last checkpoint on the surviving mesh.
 
   * retry — transient-failure wrapper for host-side I/O (checkpoint
-    writes, data reads).
+    writes/reads, heartbeat bumps, autotune cache): exponential backoff
+    with deterministic jitter so a thundering herd of 1000 hosts
+    retrying a shared filesystem decorrelates.
+
+  * FaultPlan — the deterministic fault-injection harness. A plan is a
+    small JSON dict in the ``REPRO_FAULT_PLAN`` env var, so subprocess
+    tests and CI can inject *real* failures (the process dies, a
+    checkpoint is torn on disk, an open() raises) into unmodified
+    ``solve_until`` runs at exactly reproducible points:
+
+        REPRO_FAULT_PLAN='{"kill_at_step": 60}'            # SIGKILL-style death
+        REPRO_FAULT_PLAN='{"hang_at_step": 40, "hang_s": 5}'  # straggler/hang
+        REPRO_FAULT_PLAN='{"corrupt_checkpoint": 2}'       # tear the 2nd save
+        REPRO_FAULT_PLAN='{"io_errors": 3}'                # 3 transient EIOs
+
+    The engine's checkpointing drivers call the plan's hooks at their
+    natural boundaries (``on_step`` at reduction-check/save boundaries,
+    ``on_io`` before guarded host I/O, ``after_save`` after each
+    checkpoint write); a process without the env var pays one cached
+    ``None`` check.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import os
+import random
 import time
 from typing import Callable, Optional
+
+# exit code of a FaultPlan-injected kill: distinguishable from real crashes
+# (tracebacks exit 1) so launchers/tests can assert the *planned* death
+KILL_EXIT_CODE = 113
+
+
+class TransientIOError(OSError):
+    """Injected transient I/O failure (FaultPlan.on_io)."""
+
+
+class RankFailure(RuntimeError):
+    """A peer rank stopped heartbeating: checkpoint-restore on the
+    surviving mesh is required. Carries ``.dead`` (sorted rank ids)."""
+
+    def __init__(self, dead, msg: Optional[str] = None):
+        self.dead = sorted(dead)
+        super().__init__(msg or f"dead ranks (stale heartbeats): {self.dead}")
 
 
 @dataclasses.dataclass
@@ -37,34 +74,34 @@ class StepStats:
         self.n += 1
 
 
-class StepMonitor:
-    def __init__(self, host_id: int = 0, heartbeat_dir: Optional[str] = None,
-                 straggler_factor: float = 1.5, timeout_s: float = 300.0):
-        self.host_id = host_id
-        self.dir = heartbeat_dir
-        self.factor = straggler_factor
+class Heartbeat:
+    """Per-rank liveness file on shared storage.
+
+    ``bump(step)`` atomically rewrites ``host_<rank>.json`` (retried —
+    shared filesystems hiccup); ``dead_ranks(expected)`` returns the
+    ranks whose file is missing or older than ``timeout_s``. Kept
+    separate from :class:`StepMonitor` so a launcher can watch liveness
+    without importing any timing state."""
+
+    def __init__(self, directory: str, rank: int = 0, timeout_s: float = 300.0):
+        self.dir = directory
+        self.rank = rank
         self.timeout_s = timeout_s
-        self.stats = StepStats()
-        if self.dir:
-            os.makedirs(self.dir, exist_ok=True)
+        os.makedirs(directory, exist_ok=True)
 
-    def _path(self, host_id: int) -> str:
-        return os.path.join(self.dir, f"host_{host_id}.json")
+    def path(self, rank: Optional[int] = None) -> str:
+        return os.path.join(self.dir, f"host_{self.rank if rank is None else rank}.json")
 
-    def record(self, step: int, dt: float) -> None:
-        self.stats.update(dt)
-        if self.dir:
-            tmp = self._path(self.host_id) + ".tmp"
+    def bump(self, step: int, ewma_s: float = 0.0) -> None:
+        def write():
+            FaultPlan.active_on_io(self.path())
+            tmp = self.path() + ".tmp"
             with open(tmp, "w") as f:
-                json.dump({"step": step, "t": time.time(),
-                           "ewma_s": self.stats.ewma_s}, f)
-            os.replace(tmp, self._path(self.host_id))
+                json.dump({"step": step, "t": time.time(), "ewma_s": ewma_s}, f)
+            os.replace(tmp, self.path())
+        retry(write)
 
-    def check_peers(self, now: Optional[float] = None) -> dict:
-        """Returns {"dead": [...], "stragglers": [...], "healthy": n}."""
-        now = time.time() if now is None else now
-        if not self.dir:
-            return {"dead": [], "stragglers": [], "healthy": 1}
+    def read_all(self) -> dict[int, dict]:
         beats = {}
         for fn in os.listdir(self.dir):
             if not (fn.startswith("host_") and fn.endswith(".json")):
@@ -74,6 +111,41 @@ class StepMonitor:
                     beats[int(fn[5:-5])] = json.load(f)
             except (json.JSONDecodeError, ValueError, OSError):
                 continue  # torn write — treat as missing this round
+        return beats
+
+    def dead_ranks(self, expected: Optional[list[int]] = None,
+                   now: Optional[float] = None) -> list[int]:
+        now = time.time() if now is None else now
+        beats = self.read_all()
+        dead = [h for h, b in beats.items() if now - b["t"] > self.timeout_s]
+        if expected is not None:
+            dead += [h for h in expected if h not in beats]
+        return sorted(set(dead))
+
+
+class StepMonitor:
+    def __init__(self, host_id: int = 0, heartbeat_dir: Optional[str] = None,
+                 straggler_factor: float = 1.5, timeout_s: float = 300.0):
+        self.host_id = host_id
+        self.dir = heartbeat_dir
+        self.factor = straggler_factor
+        self.timeout_s = timeout_s
+        self.stats = StepStats()
+        self.heartbeat = (Heartbeat(heartbeat_dir, rank=host_id,
+                                    timeout_s=timeout_s)
+                          if heartbeat_dir else None)
+
+    def record(self, step: int, dt: float) -> None:
+        self.stats.update(dt)
+        if self.heartbeat is not None:
+            self.heartbeat.bump(step, ewma_s=self.stats.ewma_s)
+
+    def check_peers(self, now: Optional[float] = None) -> dict:
+        """Returns {"dead": [...], "stragglers": [...], "healthy": n}."""
+        now = time.time() if now is None else now
+        if self.heartbeat is None:
+            return {"dead": [], "stragglers": [], "healthy": 1}
+        beats = self.heartbeat.read_all()
         dead = [h for h, b in beats.items() if now - b["t"] > self.timeout_s]
         alive = {h: b for h, b in beats.items() if h not in dead}
         if alive:
@@ -86,16 +158,144 @@ class StepMonitor:
                 "healthy": len(alive) - len(stragglers)}
 
 
-def retry(fn: Callable, attempts: int = 3, backoff_s: float = 0.1,
-          exceptions=(OSError, IOError)):
-    """Run fn(), retrying transient host-side failures with backoff."""
+def retry(fn: Callable, attempts: int = 4, backoff_s: float = 0.05,
+          exceptions=(OSError, IOError), max_backoff_s: float = 2.0,
+          jitter: float = 0.25, seed: Optional[int] = None,
+          sleep: Callable[[float], None] = time.sleep):
+    """Run fn(), retrying transient host-side failures with exponential
+    backoff + jitter.
+
+    The wait before attempt ``i+1`` is ``backoff_s * 2**i`` (capped at
+    ``max_backoff_s``), scaled by a uniform factor in ``[1 - jitter,
+    1 + jitter]`` so simultaneous retries across a fleet decorrelate.
+    ``seed`` makes the jitter sequence deterministic (tests); ``sleep``
+    is injectable for the same reason. The last failure propagates."""
+    rng = random.Random(seed)
     for i in range(attempts):
         try:
             return fn()
         except exceptions:
             if i == attempts - 1:
                 raise
-            time.sleep(backoff_s * (2 ** i))
+            wait = min(backoff_s * (2 ** i), max_backoff_s)
+            if jitter:
+                wait *= 1.0 + jitter * (2.0 * rng.random() - 1.0)
+            sleep(wait)
+
+
+# ---------------------------------------------------------------------------
+# deterministic fault injection
+# ---------------------------------------------------------------------------
+PLAN_ENV = "REPRO_FAULT_PLAN"
+_active_plan: Optional["FaultPlan"] = None
+_active_loaded = False
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Deterministic failure schedule for one process.
+
+    ``kill_at_step``/``hang_at_step`` fire in :meth:`on_step` when the
+    driver's completed-iteration counter reaches them (drivers call the
+    hook at reduction-check/save boundaries, so a kill lands *between*
+    an async checkpoint kickoff and the next block — exactly the window
+    a preemption hits). ``corrupt_checkpoint`` tears the N-th completed
+    checkpoint on disk (1-based; truncates one tensor file), modelling a
+    partially-flushed save that atomic-rename cannot catch.
+    ``io_errors`` makes the next N guarded I/O operations raise
+    :class:`TransientIOError` (consumed by :meth:`on_io`), exercising
+    the retry paths."""
+
+    kill_at_step: Optional[int] = None
+    hang_at_step: Optional[int] = None
+    hang_s: float = 5.0
+    rank: int = 0                 # rank this plan applies to (default all == 0)
+    corrupt_checkpoint: Optional[int] = None
+    io_errors: int = 0
+    _saves_seen: int = dataclasses.field(default=0, repr=False)
+    _killed: bool = dataclasses.field(default=False, repr=False)
+
+    # ---------------- construction ----------------
+    @classmethod
+    def from_env(cls, environ=None) -> Optional["FaultPlan"]:
+        raw = (environ or os.environ).get(PLAN_ENV)
+        if not raw:
+            return None
+        try:
+            d = json.loads(raw)
+        except json.JSONDecodeError as e:
+            raise ValueError(f"{PLAN_ENV} is not valid JSON: {raw!r}") from e
+        if not isinstance(d, dict):
+            raise ValueError(f"{PLAN_ENV} must be a JSON object, got {raw!r}")
+        known = {f.name for f in dataclasses.fields(cls) if not f.name.startswith("_")}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"{PLAN_ENV} has unknown keys {sorted(unknown)} "
+                             f"(known: {sorted(known)})")
+        return cls(**d)
+
+    def to_env(self) -> str:
+        d = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)
+             if not f.name.startswith("_")}
+        defaults = {f.name: f.default for f in dataclasses.fields(self)}
+        return json.dumps({k: v for k, v in d.items() if v != defaults[k]})
+
+    @classmethod
+    def active(cls) -> Optional["FaultPlan"]:
+        """The process-wide plan parsed once from the environment (None
+        when no plan is set — the common case costs one global check)."""
+        global _active_plan, _active_loaded
+        if not _active_loaded:
+            _active_plan = cls.from_env()
+            _active_loaded = True
+        return _active_plan
+
+    @classmethod
+    def reset_active(cls) -> None:
+        global _active_plan, _active_loaded
+        _active_plan, _active_loaded = None, False
+
+    @classmethod
+    def active_on_io(cls, path: str = "") -> None:
+        plan = cls.active()
+        if plan is not None:
+            plan.on_io(path)
+
+    # ---------------- hooks ----------------
+    def on_step(self, step: int, rank: int = 0) -> None:
+        """Called by drivers with the completed-iteration counter at each
+        check/save boundary. Kills or hangs the process when scheduled."""
+        if rank != self.rank:
+            return
+        if (self.hang_at_step is not None and step >= self.hang_at_step):
+            t, self.hang_at_step = self.hang_s, None  # hang once
+            time.sleep(t)
+        if (self.kill_at_step is not None and not self._killed
+                and step >= self.kill_at_step):
+            self._killed = True
+            # a real preemption does not unwind the stack or flush
+            # buffers; os._exit is the closest in-process equivalent
+            os._exit(KILL_EXIT_CODE)
+
+    def on_io(self, path: str = "") -> None:
+        """Raise a transient error while the injection budget lasts."""
+        if self.io_errors > 0:
+            self.io_errors -= 1
+            raise TransientIOError(f"injected transient I/O error ({path})")
+
+    def after_save(self, ckpt_dir: str) -> None:
+        """Called after each completed checkpoint write with its final
+        directory; tears the scheduled one (truncates a tensor file so
+        restore sees a short read)."""
+        self._saves_seen += 1
+        if self.corrupt_checkpoint != self._saves_seen:
+            return
+        victims = sorted(f for f in os.listdir(ckpt_dir) if f.endswith(".npy"))
+        if victims:
+            path = os.path.join(ckpt_dir, victims[0])
+            size = os.path.getsize(path)
+            with open(path, "r+b") as f:
+                f.truncate(max(size // 2, 1))
 
 
 @dataclasses.dataclass

@@ -25,12 +25,14 @@ kernel is pure — last write wins with identical values).
 """
 from __future__ import annotations
 
+import time
 from typing import Callable, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from ..core.parallel import StencilKernel
+from . import fault as _fault
 from . import halo as _halo
 
 
@@ -97,6 +99,51 @@ def finish_reductions(kernel: StencilKernel, reds: Mapping[str, jax.Array],
     shards (or corrected by the caller)."""
     return {n: kernel.reductions[n].all_reduce(v, mesh_axes)
             for n, v in reds.items()}
+
+
+class MonitoredStepper:
+    """Rank-failure detection wired around the distributed step drivers.
+
+    Wraps the *compiled host-level* step callable (a jitted
+    ``shard_map`` around :func:`sequential_step` / :func:`multi_step` /
+    :func:`overlapped_step` — those themselves are traced, so timing
+    belongs out here): every call blocks on the result, records the
+    wall time with the :class:`~repro.distributed.fault.StepMonitor`
+    (which bumps this host's heartbeat file), and polls peer
+    heartbeats. A stale peer raises
+    :class:`~repro.distributed.fault.RankFailure` so the launcher can
+    checkpoint-restore on the surviving mesh; stragglers are surfaced
+    on ``.last_health`` without interrupting the run."""
+
+    def __init__(self, step: Callable, monitor: "_fault.StepMonitor",
+                 nsteps_per_call: int = 1, check_peers_every: int = 1):
+        self.step = step
+        self.monitor = monitor
+        self.nsteps_per_call = max(int(nsteps_per_call), 1)
+        self.check_peers_every = max(int(check_peers_every), 1)
+        self.calls = 0
+        self.last_health = {"dead": [], "stragglers": [], "healthy": 1}
+
+    def __call__(self, *args, **kwargs):
+        t0 = time.perf_counter()
+        out = self.step(*args, **kwargs)
+        out = jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        self.calls += 1
+        self.monitor.record(self.calls * self.nsteps_per_call,
+                            dt / self.nsteps_per_call)
+        if self.calls % self.check_peers_every == 0:
+            self.last_health = self.monitor.check_peers()
+            if self.last_health["dead"]:
+                raise _fault.RankFailure(self.last_health["dead"])
+        return out
+
+
+def monitored(step: Callable, monitor: "_fault.StepMonitor",
+              **kwargs) -> MonitoredStepper:
+    """Convenience wrapper: ``monitored(jax.jit(shard_mapped_step),
+    StepMonitor(...))`` — see :class:`MonitoredStepper`."""
+    return MonitoredStepper(step, monitor, **kwargs)
 
 
 def sequential_step(

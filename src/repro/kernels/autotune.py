@@ -371,10 +371,18 @@ def _load_cache(path: str) -> dict[str, TuneResult]:
     """Load a persistent cache, IGNORING (not crashing on) files written
     by older schema versions: PR 1–3 binaries cached launches without the
     march/halos geometry in the key, so their winners may be invalid for
-    the streamed engine — a version mismatch simply re-tunes."""
-    try:
+    the streamed engine — a version mismatch simply re-tunes. Transient
+    read failures (shared filesystems hiccup) are retried with backoff
+    before giving up on the cache."""
+    from ..distributed import fault
+
+    def read():
+        fault.FaultPlan.active_on_io(path)
         with open(path) as f:
-            raw = json.load(f)
+            return json.load(f)
+
+    try:
+        raw = fault.retry(read, exceptions=(OSError,))
         if not isinstance(raw, dict) or raw.get("version") != CACHE_VERSION:
             return {}
         return {k: TuneResult.from_json(v)
@@ -384,9 +392,15 @@ def _load_cache(path: str) -> dict[str, TuneResult]:
 
 
 def _save_cache(path: str, cache: dict[str, TuneResult]) -> None:
-    tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump({"version": CACHE_VERSION,
-                   "entries": {k: v.to_json() for k, v in cache.items()}},
-                  f, indent=1)
-    os.replace(tmp, path)
+    from ..distributed import fault
+
+    def write():
+        fault.FaultPlan.active_on_io(path)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"version": CACHE_VERSION,
+                       "entries": {k: v.to_json() for k, v in cache.items()}},
+                      f, indent=1)
+        os.replace(tmp, path)
+
+    fault.retry(write, exceptions=(OSError,))
