@@ -8,7 +8,10 @@ that shares the same row key and a compatible ``_meta.py`` stamp (same
 jax backend — a CPU record is never judged against a TPU one), and any
 per-step-time regression beyond the threshold fails the run.
 
-Row keys: teff records key by (``name``, grid size ``n``, ``nsteps``);
+Row keys: teff records key by (``name``, grid size ``n``, ``nsteps``,
+storage ``dtype`` — absent on pre-mixed-precision rows, so old baselines
+keep matching; the ``BENCH_teff_mixed_*.json`` family rides the same
+``BENCH_teff*.json`` glob and is guarded per dtype);
 solver records (nested dicts) key by (solver, variant, n) — e.g.
 ``("porosity", "jnp", 64)``, ``("gp", "fused_k2", 32)``. Interpret-mode
 ``pallas`` solver timings are skipped (correctness-path records, pure
@@ -40,7 +43,8 @@ def load(path: str) -> dict:
 
 
 def row_key(row: dict) -> tuple:
-    return (row.get("name"), row.get("n"), row.get("nsteps"))
+    return (row.get("name"), row.get("n"), row.get("nsteps"),
+            row.get("dtype"))
 
 
 SKIP_SUBSTRINGS = ("broadcast",)   # unjitted didactic baselines: pure noise

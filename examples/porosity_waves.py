@@ -60,6 +60,7 @@ class PorosityConfig:
     eta: float = 1.0           # compaction viscosity
     rho_g: float = 30.0        # buoyancy contrast
     backend: str = "jnp"
+    dtype: str = "float32"     # field STORAGE dtype; compute stays f32
     flux_split: bool = False
     bc: str = "neumann"        # neumann | dirichlet | periodic | none
     interpret: bool | None = None
@@ -102,6 +103,9 @@ def init_state(cfg: PorosityConfig):
     x, y = grid.meshgrid()
     phi = cfg.phi0 + cfg.dphi * cfg.phi0 * jnp.exp(
         -((x - 5.0) ** 2 + (y - 2.0) ** 2) / 0.5)
+    # storage rounding happens once, here — every later step computes in
+    # f32 and rounds only on store (see README "Mixed precision")
+    phi = phi.astype(jnp.dtype(cfg.dtype))
     Pe = jnp.zeros_like(phi)
     return grid, phi, Pe
 
@@ -123,8 +127,8 @@ def make_step(grid: Grid, cfg: PorosityConfig):
     dx, dy = grid.spacing
     phi0, npow, eta, rho_g = cfg.phi0, cfg.npow, cfg.eta, cfg.rho_g
     bc = boundary_conditions(cfg)
-    ps = init_parallel_stencil(backend=cfg.backend, ndims=2,
-                               interpret=cfg.interpret)
+    ps = init_parallel_stencil(backend=cfg.backend, dtype=cfg.dtype,
+                               ndims=2, interpret=cfg.interpret)
 
     if not cfg.flux_split:
         @ps.parallel(outputs=("phi2", "Pe2"),
@@ -165,8 +169,8 @@ def make_step(grid: Grid, cfg: PorosityConfig):
         return {"phi2": phi_new, "Pe2": Pe_new}
 
     nx, ny = grid.shape
-    qx0 = jnp.zeros((nx - 1, ny), jnp.float32)
-    qy0 = jnp.zeros((nx, ny - 1), jnp.float32)
+    qx0 = jnp.zeros((nx - 1, ny), jnp.dtype(cfg.dtype))
+    qy0 = jnp.zeros((nx, ny - 1), jnp.dtype(cfg.dtype))
 
     def step(phi, Pe, dtau):
         q = fluxes(qx=qx0, qy=qy0, phi=phi, Pe=Pe)
@@ -259,6 +263,10 @@ def main(argv=None):
     ap.add_argument("--nt", type=int, default=500)
     ap.add_argument("--npow", type=float, default=3.0, help="k ~ phi^n")
     ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--dtype", default="float32",
+                    choices=["float32", "bfloat16", "float16"],
+                    help="field storage dtype (stencil arithmetic stays "
+                         "f32; bf16/f16 halve the bytes every sweep moves)")
     ap.add_argument("--flux-split", action="store_true",
                     help="explicit staggered flux fields (two launches)")
     ap.add_argument("--bc", default="neumann",
@@ -287,7 +295,8 @@ def main(argv=None):
         ap.error("--checkpoint-dir requires --tol (checkpoints ride the "
                  "convergence-driven solve loop)")
     cfg = PorosityConfig(n=args.n, nt=args.nt, npow=args.npow,
-                         backend=args.backend, flux_split=args.flux_split,
+                         backend=args.backend, dtype=args.dtype,
+                         flux_split=args.flux_split,
                          bc=args.bc, tol=args.tol,
                          check_every=args.check_every,
                          checkpoint_dir=args.checkpoint_dir,

@@ -175,7 +175,11 @@ def make_solver(
     def solver(fields, tol, max_iters):
         tol = jnp.asarray(tol, jnp.float32)
         max_iters = jnp.asarray(max_iters, jnp.int32)
-        cur0 = dict(fields)
+        # Carry fields at the kernel's STORAGE dtype: a bf16-storage
+        # kernel returns bf16 buffers, so f32 initial fields would make
+        # the while_loop carry type-unstable after the first rotation.
+        st = kernel.ps.dtype
+        cur0 = {n: jnp.asarray(v, st) for n, v in fields.items()}
         reds0 = {n: jnp.zeros((), jnp.float32) for n in kernel.reductions}
         err0 = jnp.float32(jnp.inf if until == "below" else -jnp.inf)
 
@@ -226,7 +230,9 @@ def _solve_checkpointed(
     solver = jax.jit(make_solver(kernel, scalars, check_every=check_every,
                                  error=error, until=until))
     block = save_every * check_every
-    cur = dict(fields)
+    # storage-dtype carry (same rationale as make_solver): resume-vs-
+    # fresh stay bitwise because checkpoints then hold storage dtype too
+    cur = {n: jnp.asarray(v, kernel.ps.dtype) for n, v in fields.items()}
     reds = {n: jnp.zeros((), jnp.float32) for n in kernel.reductions}
     err = jnp.float32(jnp.inf if until == "below" else -jnp.inf)
     done, resumed_from = 0, None

@@ -71,19 +71,56 @@ from .. import ir as _ir
 _BACKENDS = ("jnp", "pallas")
 
 
+def _bf16_load_f32(x):
+    """bf16 -> f32 as integer bit movement (widen + shift): exact, and
+    — unlike the ``convert`` HLO, which LLVM scalarizes to a libcall on
+    CPUs without native bf16 — it vectorizes inside fused loops."""
+    u = jax.lax.bitcast_convert_type(x, jnp.uint16).astype(jnp.uint32)
+    return jax.lax.bitcast_convert_type(u << 16, jnp.float32)
+
+
+def _f32_store_bf16(x):
+    """f32 -> bf16 round-to-nearest-even as integer bit arithmetic.
+    Bit-identical to ``astype(bfloat16)`` for finite values and Inf
+    (ties-to-even via the odd-bit bias); quiet-NaN payloads survive,
+    signaling NaNs with sub-0x8000 payloads are not preserved."""
+    u = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    bias = jnp.uint32(0x7FFF) + ((u >> 16) & jnp.uint32(1))
+    return jax.lax.bitcast_convert_type(
+        ((u + bias) >> 16).astype(jnp.uint16), jnp.bfloat16)
+
+
 @dataclasses.dataclass(frozen=True)
 class ParallelStencil:
-    """Backend/dtype/ndims context (the paper's ``@init_parallel_stencil``)."""
+    """Backend/dtype/ndims context (the paper's ``@init_parallel_stencil``).
+
+    ``dtype`` is the *storage* dtype — what fields occupy in HBM and what
+    every kernel call returns. ``compute_dtype`` (default: f32 for
+    sub-f32 float storage, else the storage dtype itself — see
+    ``kernels.stencil.default_compute_dtype``) is what the stencil
+    arithmetic runs at: fields are cast up on load and back down on
+    store, on both backends, so bf16/f16 storage halves bytes moved
+    while derivatives keep f32 precision."""
 
     backend: str = "jnp"
     dtype: Any = jnp.float32
     ndims: int = 3
     interpret: bool | None = None  # None -> auto (True unless on real TPU)
+    compute_dtype: Any = None      # None -> default_compute_dtype(dtype)
 
     def __post_init__(self):
         if self.backend not in _BACKENDS:
             raise ValueError(f"backend must be one of {_BACKENDS}")
         object.__setattr__(self, "dtype", jnp.dtype(self.dtype))
+        cd = self.compute_dtype
+        if cd is None:
+            cd = _stencil.default_compute_dtype(self.dtype)
+        object.__setattr__(self, "compute_dtype", jnp.dtype(cd))
+
+    @property
+    def acc_dtype(self) -> jnp.dtype:
+        """Reduction-accumulation dtype (never narrower than f32)."""
+        return _stencil.accum_dtype(self.compute_dtype)
 
     def parallel(
         self,
@@ -133,9 +170,10 @@ class ParallelStencil:
 
 def init_parallel_stencil(
     backend: str = "jnp", dtype: Any = jnp.float32, ndims: int = 3,
-    interpret: bool | None = None,
+    interpret: bool | None = None, compute_dtype: Any = None,
 ) -> ParallelStencil:
-    return ParallelStencil(backend=backend, dtype=dtype, ndims=ndims, interpret=interpret)
+    return ParallelStencil(backend=backend, dtype=dtype, ndims=ndims,
+                           interpret=interpret, compute_dtype=compute_dtype)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -232,8 +270,12 @@ class StencilKernel:
         computes. The fused epilogue is tested ``allclose`` against this
         (bitwise only holds within one compiled program)."""
         reds = {}
+        acc = self.ps.acc_dtype
         for name, r in self.reductions.items():
-            ops = [outs[op] if op in outs else fields[op]
+            # lift operands to the accumulation dtype first: bf16 storage
+            # must not fold a 256^3 sum in bf16 (it plateaus after ~256
+            # increments and the convergence signal is gone)
+            ops = [(outs[op] if op in outs else fields[op]).astype(acc)
                    for op in r.operands]
             reds[name] = r.fold(r.map_element(*ops))
         return reds
@@ -248,6 +290,12 @@ class StencilKernel:
                 scalars[name] = v
         if not fields:
             raise ValueError("no field arguments found")
+        # Fields live at the context's storage dtype: callers may hand in
+        # f32 (or f64 host) arrays to a bf16-storage kernel and get the
+        # same carry dtype a chained solve would — cast once at the rim
+        # (a no-op asarray for device arrays already at storage dtype).
+        fields = {n: jnp.asarray(v, self.ps.dtype)
+                  for n, v in fields.items()}
         shapes = {n: tuple(np.shape(v)) for n, v in fields.items()}
         base = tuple(
             max(s[a] for s in shapes.values()) for a in range(self.ps.ndims)
@@ -357,9 +405,16 @@ class StencilKernel:
         return geom.ir
 
     def cost_model(self, **kwargs) -> _ir.StencilCostModel:
-        """Analytic flop/byte cost model for a given field set."""
-        return _ir.StencilCostModel.from_ir(self.stencil_ir(**kwargs),
-                                            self.ps.dtype.itemsize)
+        """Analytic flop/byte cost model for a given field set. Byte
+        counts use the *storage* itemsize (what actually crosses HBM
+        under mixed precision); reduction partials are accounted at the
+        accumulation width."""
+        ir = self.stencil_ir(**kwargs)
+        isz = self.ps.dtype.itemsize
+        return _ir.StencilCostModel.from_ir(
+            ir, isz,
+            field_itemsizes=tuple(isz for _ in ir.field_shapes),
+            partials_itemsize=self.ps.acc_dtype.itemsize)
 
     # -- backends -----------------------------------------------------------
     # Every backend runner returns ``(outs, reds)`` — ``reds`` is None for
@@ -368,13 +423,110 @@ class StencilKernel:
     # update, so XLA fuses the check into the step instead of paying a
     # second HBM pass); the pallas realization folds per-tile partials
     # inside the launch itself.
+    def _compute_fields(self, fields):
+        """Storage -> compute cast on load (no-op when the dtypes agree):
+        the jnp-backend twin of the pallas kernel's in-window cast."""
+        cd = self.ps.compute_dtype
+        if cd == self.ps.dtype:
+            return fields
+        if self._bittrick:
+            return {n: _bf16_load_f32(v) for n, v in fields.items()}
+        return {n: v.astype(cd) for n, v in fields.items()}
+
+    @property
+    def _bittrick(self):
+        """bf16 storage with f32 compute takes the integer-bit-twiddle
+        conversion path: LLVM has no vector lowering for bf16<->f32
+        ``convert`` on most CPUs (it emits a per-element libcall once
+        XLA's float normalization injects converts mid-loop), but the
+        same conversion written as shift/add on uint16/uint32 words
+        vectorizes like any integer code. The bit path IS round-to-
+        nearest-even, so results are identical to ``astype``."""
+        return (self.ps.dtype == jnp.bfloat16
+                and self.ps.compute_dtype == jnp.float32)
+
+    @staticmethod
+    def _opaque_true(v):
+        """A data-dependent, always-true predicate XLA cannot fold away
+        (the popcount of any machine word is at most 64). Used to pin a
+        computation boundary via ``lax.cond`` — see
+        :meth:`_fenced_updates`."""
+        if v.dtype.itemsize == 8:
+            bits = jax.lax.bitcast_convert_type(
+                v.ravel()[0], jnp.uint32)[0]
+        else:
+            bits = jax.lax.bitcast_convert_type(
+                v.ravel()[0],
+                jnp.uint16 if v.dtype.itemsize == 2 else jnp.uint32)
+        return jax.lax.population_count(
+            bits.astype(jnp.uint32)) <= jnp.uint32(64)
+
+    def _fenced_updates(self, fields, scalars):
+        """Run ``self.fn`` (cast to compute dtype on load, back to
+        storage on store) behind a fusion fence, for sub-f32 storage.
+
+        XLA:CPU loop-fuses the storage-dtype boundary scatter into the
+        update computation, producing one mega-loop in which every
+        narrow-float load/store converts element-wise — 2-3x slower
+        than memory bandwidth. ``optimization_barrier`` is expanded
+        away before fusion runs, so the only reliable fence is a
+        computation boundary: a ``lax.cond`` whose predicate is
+        data-dependent (always true at runtime, never constant-foldable,
+        so the conditional cannot be inlined). Only the *fields* enter
+        the branch — keeping the output arrays out of the conditional
+        avoids full-array copy insertion around it. f32 storage skips
+        the fence: there the single fused loop IS the fast path."""
+        names = list(fields)
+
+        def compute(vals):
+            ups = self.fn(**self._compute_fields(dict(zip(names, vals))),
+                          **scalars)
+            return tuple(self._store(ups[o]) for o in self.outputs)
+
+        vals = tuple(fields.values())
+        shapes = jax.eval_shape(compute, vals)
+        updates = jax.lax.cond(
+            self._opaque_true(vals[0]), compute,
+            lambda _: tuple(jnp.zeros(s.shape, s.dtype) for s in shapes),
+            vals)
+        return dict(zip(self.outputs, updates))
+
+    @staticmethod
+    def _dus_bits(prev, idx, upd):
+        """Interior scatter as a raw ``dynamic_update_slice`` on the
+        bit-identical unsigned-int view: no oob-guard select, nothing
+        for float normalization to rewrite."""
+        starts = tuple(0 if s.start is None else int(s.start) for s in idx)
+        uint = jnp.dtype(f"uint{8 * upd.dtype.itemsize}")
+        p = jax.lax.bitcast_convert_type(prev, uint)
+        u = jax.lax.bitcast_convert_type(upd, uint)
+        return jax.lax.bitcast_convert_type(
+            jax.lax.dynamic_update_slice(p, u, starts), prev.dtype)
+
+    def _store(self, upd):
+        """Compute -> storage cast on store, the inverse of
+        :meth:`_compute_fields` (no-op when the dtypes agree)."""
+        if upd.dtype == self.ps.dtype:
+            return upd
+        if self._bittrick and upd.dtype == jnp.float32:
+            return _f32_store_bf16(upd)
+        return upd.astype(self.ps.dtype)
+
     def _run_jnp(self, fields, scalars, base, geom: KernelGeometry):
-        updates = self.fn(**fields, **scalars)
+        mixed = self.ps.compute_dtype != self.ps.dtype
+        if mixed:
+            # Sub-f32 storage: fence the update computation away from
+            # the boundary scatter (see _fenced_updates — one fused
+            # loop with a DUS/pad/concat root drops out of XLA:CPU's
+            # vectorized path and runs 1.4-2x slower than the two-pass).
+            updates = self._fenced_updates(fields, scalars)
+        else:
+            updates = self.fn(**fields, **scalars)
         ring = self.radius if geom.ir is None else None
         out = {}
         for name in self.outputs:
             prev = fields[name]
-            upd = updates[name].astype(self.ps.dtype)
+            upd = self._store(updates[name])
             # Per-axis write semantics from the update's shape — the SAME
             # derivation the pallas backend applies to windows (including
             # the staggered-axes-must-be-`all` rule), so a kernel that
@@ -386,7 +538,14 @@ class StencilKernel:
                 slice(None) if m == "all" else slice(w, prev.shape[a] - w)
                 for a, (m, w) in enumerate(zip(modes, rings))
             )
-            res = prev.at[idx].set(upd)
+            if mixed:
+                # Guard-free DUS on the bit-identical unsigned-int view:
+                # jnp's .at[].set would add an oob-guard select that XLA
+                # float-normalizes into convert/f32-select/convert loops
+                # over the FULL narrow-float array.
+                res = self._dus_bits(prev, idx, upd)
+            else:
+                res = prev.at[idx].set(upd)
             cond = self.bc.get(name)
             if cond is not None:
                 res = cond.apply(res)
@@ -444,17 +603,16 @@ class StencilKernel:
             # run the all-parallel realization (identical semantics).
             return self._run_jnp(fields, scalars, base, geom)
         nb = n_march // bm
-        dtype = self.ps.dtype
 
         def block_at(i):
             sc = jnp.clip(i * bm - e_lo, 0, n_march - slab)
             slabs = {n: jax.lax.dynamic_slice_in_dim(v, sc, slab, axis=march)
                      for n, v in fields.items()}
-            updates = self.fn(**slabs, **scalars)
+            updates = self.fn(**self._compute_fields(slabs), **scalars)
             outs = []
             for o in self.outputs:
                 modes, rings, off = geometry[o]
-                upd = updates[o].astype(dtype)
+                upd = self._store(updates[o])
                 w_m = rings[march]
                 # Update index u holds the update of global plane
                 # sc + u + w_m; block positions g in [i*bm, i*bm + bm)
@@ -547,6 +705,7 @@ class StencilKernel:
                 dtype=self.ps.dtype,
                 tile=self.tile,
                 vmem_budget=self.vmem_budget,
+                compute_dtype=self.ps.compute_dtype,
                 interpret=self.ps.interpret,
                 nsteps=nsteps,
                 rotations=self.rotations,

@@ -140,12 +140,16 @@ def io_counts_from_ir(ir) -> tuple[int, int]:
     return ir.io_counts()
 
 
-def a_eff_from_ir(ir, itemsize: int, nsteps: int = 1) -> float:
+def a_eff_from_ir(ir, itemsize: int, nsteps: int = 1,
+                  field_itemsizes=None) -> float:
     """A_eff derived from the stencil IR: exact per-field byte volumes
-    (staggered fields at their own extents), divided by the temporal-
-    blocking depth. Replaces hand-supplied ``n_read``/``n_write`` for any
-    kernel built through ``@parallel``."""
-    return ir.io_bytes(itemsize) / max(int(nsteps), 1)
+    (staggered fields at their own extents; mixed-precision fields at
+    their own storage width via ``field_itemsizes``, a ``{field:
+    itemsize}`` mapping), divided by the temporal-blocking depth.
+    Replaces hand-supplied ``n_read``/``n_write`` for any kernel built
+    through ``@parallel``."""
+    return (ir.io_bytes(itemsize, field_itemsizes=field_itemsizes)
+            / max(int(nsteps), 1))
 
 
 def t_eff(a_eff_bytes: float, seconds: float) -> float:

@@ -23,6 +23,42 @@ from jax import lax
 from ..compat import axis_size as _axis_size
 
 
+# Wire formats for ghost payloads. Interiors can stay f32 while the
+# ppermute payload ships narrower: "bf16" casts around the permute
+# (exactly representable halves of the mantissa survive; error is one
+# bf16 rounding, ~3 decimal digits), "int8" block-quantizes via
+# ``distributed.compression`` (error <= scale/2 = max|payload|/254 per
+# block — guarded, not exact; see README "Mixed precision"). Payloads
+# already at (or below) the wire width, and non-float payloads, pass
+# through uncompressed — compression never widens a message.
+COMPRESS_MODES = (None, "bf16", "int8")
+
+
+def _check_compress(compress):
+    if compress not in COMPRESS_MODES:
+        raise ValueError(
+            f"compress={compress!r} is not one of {COMPRESS_MODES}")
+
+
+def _permute(payload, mesh_ax, perm, compress):
+    """``lax.ppermute`` with an optionally compressed wire format. The
+    result is cast back to the payload dtype, so call sites are wire-
+    format agnostic."""
+    dt = payload.dtype
+    is_float = jnp.issubdtype(dt, jnp.floating)
+    if compress == "bf16" and is_float and dt.itemsize > 2:
+        return lax.ppermute(payload.astype(jnp.bfloat16), mesh_ax,
+                            perm).astype(dt)
+    if compress == "int8" and is_float and dt.itemsize > 1:
+        from . import compression as _comp
+
+        q, scale, meta = _comp.quantize_int8(payload)
+        q = lax.ppermute(q, mesh_ax, perm)
+        scale = lax.ppermute(scale, mesh_ax, perm)
+        return _comp.dequantize_int8(q, scale, meta).astype(dt)
+    return lax.ppermute(payload, mesh_ax, perm)
+
+
 def _slab(arr, axis: int, start: int, size: int):
     idx = [slice(None)] * arr.ndim
     idx[axis] = slice(start, start + size) if start >= 0 else slice(start, start + size or None)
@@ -63,6 +99,7 @@ def halo_exchange(
     radius: int = 1,
     periodic: bool | Sequence[bool] = False,
     depths=None,
+    compress: str | None = None,
 ) -> jax.Array:
     """Refresh ghost layers of ``local`` along each decomposed axis.
 
@@ -77,7 +114,13 @@ def halo_exchange(
         of the low ghost ring / ``hi`` of the high ring are refreshed, so
         a field the stencil reads one-sided (or not at all) moves fewer
         (or no) bytes. ``None`` refreshes the full ring.
+      compress: optional wire format for the ghost payload — ``"bf16"``
+        (cast around the permute, 2 B/elt) or ``"int8"`` (block-
+        quantized via ``distributed.compression``, ~1 B/elt). Ghosts
+        land back at the array dtype; interiors are untouched. Single-
+        rank self-wraps are local copies and stay exact.
     """
+    _check_compress(compress)
     if array_axes is None:
         array_axes = list(range(len(mesh_axes)))
     if isinstance(periodic, bool):
@@ -104,7 +147,7 @@ def halo_exchange(
             perm_r = [(i, i + 1) for i in range(n - 1)]
             if per:
                 perm_r.append((n - 1, 0))
-            recv_lo = lax.ppermute(send_hi, mesh_ax, perm_r)
+            recv_lo = _permute(send_hi, mesh_ax, perm_r, compress)
             has_left = (idx > 0) | (per and n > 1)
             cur_lo = _slab(local, arr_ax, r - d_lo, d_lo)
             local = _set_slab(local, arr_ax, r - d_lo,
@@ -115,7 +158,7 @@ def halo_exchange(
             perm_l = [(i + 1, i) for i in range(n - 1)]
             if per:
                 perm_l.append((0, n - 1))
-            recv_hi = lax.ppermute(send_lo, mesh_ax, perm_l)
+            recv_hi = _permute(send_lo, mesh_ax, perm_l, compress)
             has_right = (idx < n - 1) | (per and n > 1)
             cur_hi = _slab(local, arr_ax, -r, d_hi)
             local = _set_slab(local, arr_ax, -r,
@@ -151,6 +194,7 @@ def grouped_halo_exchange(
     radius: int = 1,
     periodic: bool | Sequence[bool] = False,
     depths: Mapping[str, object] | None = None,
+    compress: str | None = None,
 ) -> dict:
     """Refresh ghost layers of *all* ``names`` with ONE message per
     (axis, direction) round-trip instead of one per field.
@@ -168,8 +212,17 @@ def grouped_halo_exchange(
     actually reads; a field with depth 0 on a side contributes nothing to
     that direction's payload.
 
-    Values are identical to per-field :func:`halo_exchange` calls.
+    ``compress`` selects the wire format of the whole concatenated
+    payload (``"bf16"``/``"int8"``, see :func:`halo_exchange`): each
+    (axis, direction, dtype-group) message is compressed once, so the
+    per-message scale metadata of ``"int8"`` amortizes over every field
+    riding in it.
+
+    Values are identical to per-field :func:`halo_exchange` calls
+    (with matching ``compress``, which quantizes per concatenated
+    payload here vs per field there — both within the int8 error bound).
     """
+    _check_compress(compress)
     if array_axes is None:
         array_axes = list(range(len(mesh_axes)))
     if isinstance(periodic, bool):
@@ -211,9 +264,9 @@ def grouped_halo_exchange(
                     _slab(out[f], arr_ax, -(r + fdep[f][ax_i][0]),
                           fdep[f][ax_i][0]) for f in lo_grp
                 ]
-                recv = lax.ppermute(
+                recv = _permute(
                     jnp.concatenate([s.reshape(-1) for s in send_hi]),
-                    mesh_ax, perm_r)
+                    mesh_ax, perm_r, compress)
                 ofs = 0
                 for f, s in zip(lo_grp, send_hi):
                     piece = recv[ofs:ofs + s.size].reshape(s.shape)
@@ -229,9 +282,9 @@ def grouped_halo_exchange(
                     _slab(out[f], arr_ax, r, fdep[f][ax_i][1])
                     for f in hi_grp
                 ]
-                recv = lax.ppermute(
+                recv = _permute(
                     jnp.concatenate([s.reshape(-1) for s in send_lo]),
-                    mesh_ax, perm_l)
+                    mesh_ax, perm_l, compress)
                 ofs = 0
                 for f, s in zip(hi_grp, send_lo):
                     piece = recv[ofs:ofs + s.size].reshape(s.shape)
@@ -251,21 +304,26 @@ def exchange_many(
     periodic=False,
     grouped: bool = True,
     depths: Mapping[str, object] | None = None,
+    compress: str | None = None,
 ) -> dict:
     """Refresh ghost layers of several fields. ``grouped=True`` (default)
     sends the whole field group per (axis, direction) in one ppermute
     (:func:`grouped_halo_exchange`); ``grouped=False`` keeps the
     one-permute-per-field reference path. ``depths`` tightens each
-    field's exchanged slab to its inferred per-axis (lo, hi) read depth
-    (see :func:`grouped_halo_exchange`)."""
+    field's exchanged slab to its inferred per-axis (lo, hi) read depth;
+    ``compress`` selects the ghost wire format (``"bf16"``/``"int8"``,
+    see :func:`halo_exchange`)."""
+    _check_compress(compress)
     if grouped:
         return grouped_halo_exchange(fields, names, mesh_axes, radius=radius,
-                                     periodic=periodic, depths=depths)
+                                     periodic=periodic, depths=depths,
+                                     compress=compress)
     out = dict(fields)
     for n in names:
         out[n] = halo_exchange(
             out[n], mesh_axes, radius=radius, periodic=periodic,
-            depths=None if depths is None else depths.get(n))
+            depths=None if depths is None else depths.get(n),
+            compress=compress)
     return out
 
 

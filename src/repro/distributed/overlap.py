@@ -153,15 +153,19 @@ def sequential_step(
     exchange: Sequence[str],
     mesh_axes: Sequence[str],
     periodic=False,
+    halo_compress: str | None = None,
 ):
     """Reference: exchange halos, then update. No overlap. A kernel with
     fused reductions returns ``((outs, reds), fresh)`` with the rank
     partials already combined across ranks (:func:`finish_reductions`) —
-    the whole convergence check costs one collective scalar."""
+    the whole convergence check costs one collective scalar.
+    ``halo_compress`` selects the ghost wire format (``"bf16"``/
+    ``"int8"`` — see :func:`..halo.halo_exchange`)."""
     r, depths, _ = _kernel_geometry(kernel, fields, scalars, exchange,
                                     mesh_axes)
     fresh = _halo.exchange_many(fields, exchange, mesh_axes, radius=r,
-                                periodic=periodic, depths=depths)
+                                periodic=periodic, depths=depths,
+                                compress=halo_compress)
     res = kernel(**fresh, **scalars)
     if kernel.reductions:
         outs, reds = res
@@ -177,6 +181,7 @@ def multi_step(
     mesh_axes: Sequence[str],
     nsteps: int,
     periodic=False,
+    halo_compress: str | None = None,
 ):
     """Temporal blocking across ranks: ONE deep halo exchange feeds k fused
     local steps — k× fewer messages (each k·r wide instead of r).
@@ -200,7 +205,7 @@ def multi_step(
         }
     fresh = _halo.exchange_many(fields, exchange, mesh_axes,
                                 radius=nsteps * r, periodic=periodic,
-                                depths=depths)
+                                depths=depths, compress=halo_compress)
     res = kernel.run_steps(nsteps, **fresh, **scalars)
     if kernel.reductions:
         outs, reds = res
@@ -216,6 +221,7 @@ def overlapped_step(
     mesh_axes: Sequence[str],
     periodic=False,
     march_axis: int | None = None,
+    halo_compress: str | None = None,
 ):
     """@hide_communication: bulk update overlaps the halo ppermutes.
 
@@ -265,7 +271,8 @@ def overlapped_step(
 
     # 1) launch grouped halo exchange (independent subgraph, one
     #    round-trip for the whole coupled field set)
-    fresh = _halo.exchange_many(fields, exchange, mesh_axes, radius=r, periodic=periodic)
+    fresh = _halo.exchange_many(fields, exchange, mesh_axes, radius=r,
+                                periodic=periodic, compress=halo_compress)
 
     # 2) bulk update with stale halos — correct except the shell ring
     #    (streamed along march_axis when requested: the interior tiles

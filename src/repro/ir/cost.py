@@ -114,11 +114,36 @@ class StencilCostModel:
     check_read_bytes: int = 0                 # one SEPARATE check pass's reads
     check_flops: FlopCount = FlopCount()      # fused epilogue map + fold
     n_reductions: int = 0                     # named reductions per launch
+    # Mixed precision: per-field STORAGE itemsizes, aligned with
+    # ``field_offsets`` (None -> every field at ``itemsize``), and the
+    # width reduction partials cross HBM at (accumulation dtype, never
+    # narrower than f32 — None -> max(4, itemsize)). Keeping these
+    # per-field keeps a_eff / roofline / autotune pruning honest when
+    # bf16 storage rides next to f32 accumulators.
+    field_itemsizes: tuple[int, ...] | None = None
+    partials_itemsize: int | None = None
 
     @classmethod
-    def from_ir(cls, ir: StencilIR, itemsize: int) -> "StencilCostModel":
-        rb = sum(math.prod(ir.field_shapes[f]) for f in ir.read_fields)
-        wb = sum(math.prod(ir.field_shapes[o]) for o in ir.out_names)
+    def from_ir(cls, ir: StencilIR, itemsize: int,
+                field_itemsizes=None,
+                partials_itemsize: int | None = None) -> "StencilCostModel":
+        """``field_itemsizes`` may be a ``{field: itemsize}`` mapping or a
+        sequence aligned with ``ir.field_shapes`` order; omitted fields /
+        None fall back to ``itemsize``."""
+        if field_itemsizes is None:
+            by_name = {f: int(itemsize) for f in ir.field_shapes}
+        elif isinstance(field_itemsizes, Mapping):
+            by_name = {f: int(field_itemsizes.get(f, itemsize))
+                       for f in ir.field_shapes}
+        else:
+            by_name = {f: int(s)
+                       for f, s in zip(ir.field_shapes, field_itemsizes)}
+            for f in ir.field_shapes:
+                by_name.setdefault(f, int(itemsize))
+        rb = sum(math.prod(ir.field_shapes[f]) * by_name[f]
+                 for f in ir.read_fields)
+        wb = sum(math.prod(ir.field_shapes[o]) * by_name[o]
+                 for o in ir.out_names)
         # the reduction epilogue's flops: the traced elementwise map plus
         # one combine op per element for the fold tree
         cf = count_flops(ir.red_exprs)
@@ -128,17 +153,22 @@ class StencilCostModel:
             shape=ir.base_shape,
             itemsize=int(itemsize),
             flops=count_flops(ir.exprs),
-            read_bytes=rb * itemsize,
-            write_bytes=wb * itemsize,
+            read_bytes=rb,
+            write_bytes=wb,
             halo=ir.halo,
             # the launch fetches a window for EVERY field argument
             # (outputs ride along as boundary-copy sources), so the
             # tile/k traffic model must count them all — only a_eff
             # (ideal reuse) restricts to the read set
             field_offsets=tuple(ir.offsets[f] for f in ir.field_shapes),
-            check_read_bytes=ir.check_io_bytes(itemsize),
+            check_read_bytes=ir.check_io_bytes(itemsize,
+                                               field_itemsizes=by_name),
             check_flops=cf,
             n_reductions=len(ir.reductions),
+            field_itemsizes=tuple(by_name[f] for f in ir.field_shapes),
+            partials_itemsize=(max(4, int(itemsize))
+                               if partials_itemsize is None
+                               else int(partials_itemsize)),
         )
 
     def a_eff_bytes(self, nsteps: int = 1) -> float:
@@ -164,7 +194,10 @@ class StencilCostModel:
             return 0.0
         n_blocks = math.prod(-(-s // int(b))
                              for s, b in zip(self.shape, tile))
-        return n_blocks * self.n_reductions * self.itemsize / m
+        # partials cross HBM at the accumulation width, not storage
+        psz = (self.partials_itemsize if self.partials_itemsize is not None
+               else max(4, self.itemsize))
+        return n_blocks * self.n_reductions * psz / m
 
     @property
     def intensity(self) -> float:
@@ -203,13 +236,20 @@ class StencilCostModel:
         tile = tuple(int(b) for b in tile)
         nd = len(tile)
         offs = self.field_offsets or ((0,) * nd,)
+        # per-field storage widths (mixed precision); fall back to the
+        # uniform itemsize when unset or misaligned with the offsets
+        if self.field_itemsizes and len(self.field_itemsizes) == len(offs):
+            sizes = self.field_itemsizes
+        else:
+            sizes = (self.itemsize,) * len(offs)
         if march_axis is None:
             n_blocks = math.prod(-(-s // b) for s, b in zip(self.shape, tile))
             win = sum(
                 math.prod(b + k * (lo + hi) - o
                           for b, (lo, hi), o in zip(tile, self.halo, off))
-                for off in offs
-            ) * self.itemsize
+                * isz
+                for off, isz in zip(offs, sizes)
+            )
             return (n_blocks * win + self.write_bytes) / k + check
         m = int(march_axis)
         bm = tile[m]
@@ -220,9 +260,9 @@ class StencilCostModel:
         win = sum(
             planes * math.prod(
                 tile[a] + k * (self.halo[a][0] + self.halo[a][1]) - off[a]
-                for a in range(nd) if a != m)
-            for off in offs
-        ) * self.itemsize
+                for a in range(nd) if a != m) * isz
+            for off, isz in zip(offs, sizes)
+        )
         return (n_cols * win + self.write_bytes) / k + check
 
     def a_eff_streamed(self, tile: Sequence[int], nsteps: int = 1,

@@ -79,28 +79,35 @@ class StencilIR:
                     seen.append(op)
         return tuple(seen)
 
-    def check_io_bytes(self, itemsize: int) -> int:
+    def check_io_bytes(self, itemsize: int,
+                       field_itemsizes=None) -> int:
         """HBM bytes of one separate (unfused) check pass: each operand
-        field streams in once. The fused epilogue's extra traffic is the
-        per-tile partials write — O(n_blocks), negligible — so this is
-        the per-check saving of ``reductions=``."""
+        field streams in once (at its own storage width when
+        ``field_itemsizes`` — a ``{field: itemsize}`` mapping — is
+        given). The fused epilogue's extra traffic is the per-tile
+        partials write — O(n_blocks), negligible — so this is the
+        per-check saving of ``reductions=``."""
         import math
 
-        return sum(math.prod(self.field_shapes[f])
-                   for f in self.check_read_fields) * itemsize
+        isz = field_itemsizes or {}
+        return sum(math.prod(self.field_shapes[f]) * isz.get(f, itemsize)
+                   for f in self.check_read_fields)
 
-    def io_bytes(self, itemsize: int) -> int:
+    def io_bytes(self, itemsize: int, field_itemsizes=None) -> int:
         """Exact bytes that must cross HBM per step under perfect reuse:
         every read field streams in once, every output streams out once
-        (staggered fields at their own, smaller extents)."""
+        (staggered fields at their own, smaller extents; mixed-precision
+        fields at their own storage width via ``field_itemsizes``, a
+        ``{field: itemsize}`` mapping defaulting to ``itemsize``)."""
         import math
 
+        isz = field_itemsizes or {}
         total = 0
         for f in self.read_fields:
-            total += math.prod(self.field_shapes[f])
+            total += math.prod(self.field_shapes[f]) * isz.get(f, itemsize)
         for o in self.out_names:
-            total += math.prod(self.field_shapes[o])
-        return total * itemsize
+            total += math.prod(self.field_shapes[o]) * isz.get(o, itemsize)
+        return total
 
     def describe(self) -> str:
         """Human-readable footprint table (README/CI smoke surface)."""

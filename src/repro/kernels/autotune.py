@@ -57,11 +57,13 @@ _CACHE: dict[tuple, TuneResult] = {}
 
 # Persistent-cache schema version. v2 added the engine-geometry fields
 # (march axis candidates, per-axis halos) to the key; v3 adds the check
-# workload (fused reduction set + cadence). Launches cached by older
-# binaries carry shorter keys that can never match (and would price a
-# checked solver off a plain sweep), so files without a matching version
-# are IGNORED (re-tuned), never trusted.
-CACHE_VERSION = 3
+# workload (fused reduction set + cadence); v4 adds the (storage,
+# compute) dtype pair — a bf16-storage run must never inherit an
+# f32-tuned winner whose VMEM window footprints are 2x its own (or vice
+# versa). Launches cached by older binaries carry shorter keys that can
+# never match, so files without a matching version are IGNORED
+# (re-tuned), never trusted.
+CACHE_VERSION = 4
 
 
 def _divisors(n: int) -> list[int]:
@@ -117,7 +119,8 @@ def cache_key(shape, dtype, radius: int, n_fields: int, tag: str = "",
               march_candidates: Sequence[int | None] | None = None,
               halos: Sequence[tuple[int, int]] | None = None,
               reductions: Sequence[str] | None = None,
-              check_every: int | None = None) -> tuple:
+              check_every: int | None = None,
+              dtypes: Sequence[str] | None = None) -> tuple:
     """Memo key covers the full search space: a call with a different
     candidate set must re-tune, not inherit another sweep's winner. The
     coupled field set's staggering (``field_offsets``) is part of the key:
@@ -132,7 +135,9 @@ def cache_key(shape, dtype, radius: int, n_fields: int, tag: str = "",
     (the fused epilogue set, e.g. ``r.describe()`` strings) and
     ``check_every`` key the check workload: a winner tuned for a plain
     sweep must not be handed to a checked solver whose epilogue shifts
-    the tile economics."""
+    the tile economics. ``dtypes`` — the (storage, compute) dtype-name
+    pair — keys mixed precision: bf16 storage halves every window
+    footprint, so an f32-tuned tile is wrong for it in both directions."""
     return (tag, tuple(int(s) for s in shape), jnp.dtype(dtype).name,
             int(radius), int(n_fields),
             tuple(int(k) for k in nsteps_candidates),
@@ -148,7 +153,8 @@ def cache_key(shape, dtype, radius: int, n_fields: int, tag: str = "",
                 (int(lo), int(hi)) for lo, hi in halos),
             None if reductions is None else tuple(sorted(
                 str(r) for r in reductions)),
-            None if check_every is None else int(check_every))
+            None if check_every is None else int(check_every),
+            None if dtypes is None else tuple(str(d) for d in dtypes))
 
 
 def autotune(
@@ -173,6 +179,7 @@ def autotune(
     halos: Sequence[tuple[int, int]] | None = None,
     reductions: Sequence[str] | None = None,
     check_every: int | None = None,
+    compute_dtype=None,
 ) -> TuneResult:
     """Find the fastest (tile, nsteps[, march_axis]) for a stencil
     problem class.
@@ -211,9 +218,16 @@ def autotune(
     """
     prune_tag = (None if cost_model is None or hw is None
                  else (getattr(hw, "name", "hw"), float(prune_ratio)))
+    # Every tune keys the FULL (storage, compute) dtype pair — the v4
+    # fix for the stale-cache bug where a bf16 run silently reused
+    # f32-tuned tiles with half-wrong VMEM footprints.
+    st = jnp.dtype(dtype)
+    cd = (_stencil.default_compute_dtype(st) if compute_dtype is None
+          else jnp.dtype(compute_dtype))
     key = cache_key(shape, dtype, radius, n_fields, tag, nsteps_candidates,
                     tiles, vmem_budget, field_offsets, prune_tag,
-                    march_candidates, halos, reductions, check_every)
+                    march_candidates, halos, reductions, check_every,
+                    dtypes=(st.name, cd.name))
     if key in _CACHE:
         return _CACHE[key]
     if cache_path and os.path.exists(cache_path):

@@ -82,6 +82,28 @@ from ..ir.reductions import normalize_reductions as _normalize_reductions
 DEFAULT_VMEM_BUDGET = 8 << 20
 
 
+def default_compute_dtype(dtype) -> jnp.dtype:
+    """The compute dtype a storage dtype implies: sub-f32 floats (bf16,
+    f16, f8) widen to float32 — fields are *stored* narrow but all
+    stencil arithmetic happens at f32 inside the VMEM window (cast on
+    load, cast on store) — while f32/f64/int storage computes in its own
+    precision. The engine-wide storage-vs-compute rule; override with
+    ``compute_dtype=`` on ``init_parallel_stencil``/``build_stencil_call``."""
+    st = jnp.dtype(dtype)
+    if jnp.issubdtype(st, jnp.floating) and st.itemsize < 4:
+        return jnp.dtype(jnp.float32)
+    return st
+
+
+def accum_dtype(compute_dtype) -> jnp.dtype:
+    """Accumulation dtype for reduction epilogues: never narrower than
+    f32 (bf16 partial sums saturate after ~256 increments — a 256^3
+    ``sum`` would plateau at a tiny fraction of its value and a
+    convergence check would silently lose its signal), and f64 compute
+    keeps f64 accumulation."""
+    return jnp.promote_types(jnp.float32, jnp.dtype(compute_dtype))
+
+
 def _divisors_leq(n: int, cap: int) -> list[int]:
     return [d for d in range(1, min(n, cap) + 1) if n % d == 0]
 
@@ -533,6 +555,7 @@ def build_stencil_call(
     shape: Sequence[int],
     radius: int,
     dtype,
+    compute_dtype=None,
     tile: Sequence[int] | None = None,
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
     interpret: bool | None = None,
@@ -550,6 +573,18 @@ def build_stencil_call(
     ``update_fn(fields, scalars) -> {out_name: update}`` is traced on
     halo-extended VMEM windows. Returns ``run(fields, scalars)`` mapping
     full arrays -> dict of full output arrays.
+
+    Mixed precision: ``dtype`` is the *storage* dtype — what the fields,
+    VMEM windows, scratch plane queues and outputs hold, and what sizes
+    the launch derivation's VMEM accounting. ``compute_dtype`` (default:
+    :func:`default_compute_dtype` — f32 for sub-f32 float storage) is
+    what the update arithmetic runs in: windows are cast on load right
+    before ``update_fn`` sees them, updates cast back to storage on
+    store, and scalars ride in SMEM at compute precision. Between
+    temporal sweeps the rotated values round through storage dtype, so a
+    k-fused launch stays bitwise-consistent with k sequential launches.
+    Reduction partials always accumulate at :func:`accum_dtype` (>= f32)
+    regardless of storage.
 
     ``shape`` is the *base* (cell-centered) extent; ``field_shapes`` may
     give smaller per-field extents for staggered fields (``shape - off``
@@ -609,6 +644,16 @@ def build_stencil_call(
     shape = tuple(int(s) for s in shape)
     nd = len(shape)
     dtype = jnp.dtype(dtype)
+    compute_dtype = (default_compute_dtype(dtype) if compute_dtype is None
+                     else jnp.dtype(compute_dtype))
+    acc_dtype = accum_dtype(compute_dtype)
+    cast_compute = compute_dtype != dtype
+
+    def call_update(windows, scalars):
+        if cast_compute:
+            windows = {n: w.astype(compute_dtype) for n, w in windows.items()}
+        return update_fn(windows, scalars)
+
     field_names = tuple(field_names)
     out_names = tuple(out_names)
     scalar_names = tuple(scalar_names)
@@ -835,7 +880,7 @@ def build_stencil_call(
                     q_ref[...] = q
                     windows[n] = q[wsl]
         for s in range(nsteps - 1):
-            updates = update_fn(windows, scalars)
+            updates = call_update(windows, scalars)
             _check_updates(updates)
             win_shapes = {n: w.shape for n, w in windows.items()}
             m = nsteps - 1 - s  # remaining sweep margins after this sweep
@@ -863,7 +908,7 @@ def build_stencil_call(
                 blended = _apply_bc_frame(blended, inkernel_bc.get(o),
                                           shapes[o], block, ext, dtype, pids)
                 windows[tgt] = blended
-        updates = update_fn(windows, scalars)
+        updates = call_update(windows, scalars)
         _check_updates(updates)
         blendeds = {}
         for o, oref in zip(out_names, out_refs):
@@ -901,7 +946,10 @@ def build_stencil_call(
                               ("all",) * nd, (0,) * nd, pids)
             for rn, rref in zip(red_names, red_refs):
                 r = reductions[rn]
-                mapped = r.map_element(*[frame_value(op)
+                # operands lift to the accumulation dtype BEFORE the
+                # elementwise map: |T2 - T| and T*T happen at >= f32
+                # even when the blended storage values are bf16
+                mapped = r.map_element(*[frame_value(op).astype(acc_dtype)
                                          for op in r.operands])
                 rref[...] = r.fold(mapped, dom).reshape((1,) * nd)
 
@@ -925,7 +973,9 @@ def build_stencil_call(
     out_specs = [pl.BlockSpec(block, out_index_map) for _ in out_names]
     out_shape = [jax.ShapeDtypeStruct(shape, dtype) for _ in out_names]
     out_specs += [pl.BlockSpec((1,) * nd, out_index_map) for _ in red_names]
-    out_shape += [jax.ShapeDtypeStruct(grid, dtype) for _ in red_names]
+    # partials stay at the accumulation dtype all the way to finish():
+    # rounding them through a bf16 output would undo the f32 folds
+    out_shape += [jax.ShapeDtypeStruct(grid, acc_dtype) for _ in red_names]
 
     kwargs = {}
     if march is not None and q_blocks > 1:
@@ -956,8 +1006,12 @@ def build_stencil_call(
     )
 
     def run(fields: Mapping[str, jax.Array], scalars: Mapping[str, jax.Array]):
+        # scalars ride in SMEM at compute precision: dt/lam quantized to
+        # bf16 would perturb every update even though the fields are the
+        # only thing the mixed-precision trade wants narrowed
         ordered_scal = [
-            jnp.asarray(scalars[n], dtype=dtype).reshape((1,)) for n in scalar_names
+            jnp.asarray(scalars[n], dtype=compute_dtype).reshape((1,))
+            for n in scalar_names
         ]
         ordered_fields = [jnp.asarray(fields[n], dtype=dtype) for n in field_names]
         for n, f in zip(field_names, ordered_fields):
@@ -991,6 +1045,8 @@ def build_stencil_call(
     run.grid = grid
     run.block = block
     run.nsteps = nsteps
+    run.dtype = dtype
+    run.compute_dtype = compute_dtype
     run.reductions = dict(reductions)
     run.field_shapes = dict(shapes)
     run.halo = sweep_halo
