@@ -1,12 +1,22 @@
 """Generate the EXPERIMENTS.md roofline/dry-run tables from results/dryrun.
 
     PYTHONPATH=src python -m benchmarks.report > /tmp/tables.md
+
+``--telemetry RUN.jsonl`` appends the per-phase timing and error-
+trajectory tables of an instrumented run (a ``REPRO_TELEMETRY=`` JSONL
+log) to the report — solve wall time split by span, the convergence
+trajectory harvested at chunk boundaries, and the roofline-gap gauges.
 """
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
 
 HW = "TPU v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s/link ICI"
 
@@ -93,7 +103,36 @@ def dryrun_table(recs):
     return "\n".join(lines)
 
 
-def main():
+def telemetry_tables(log_path: str) -> str:
+    """Per-phase timing + error-trajectory + roofline tables rendered
+    from an instrumented run's JSONL log (same aggregation as
+    ``python -m repro.telemetry.report``, embedded in this report)."""
+    from repro.telemetry import report as trep, schema as tschema
+
+    records = tschema.load_records(log_path)
+    parts = [f"<!-- telemetry: {len(records)} records from {log_path} -->"]
+    for title, rows, cols in (
+        ("Per-phase timing (telemetry spans)", trep.phase_summary(records),
+         ["phase", "count", "total_s", "mean_s", "p50_s", "p90_s", "max_s"]),
+        ("Error trajectory (chunk-boundary harvest)",
+         trep.error_trajectory(records), ["iters", "err", "per_step_s"]),
+        ("Roofline gap (last gauges)",
+         [g for g in trep.last_gauges(records)
+          if g["gauge"].startswith("roofline.")],
+         ["gauge", "labels", "value"]),
+    ):
+        t = trep.format_table(rows, cols, title)
+        if t:
+            parts.append("\n" + t)
+    return "\n".join(parts)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--telemetry", metavar="RUN.jsonl", default=None,
+                    help="append per-phase/error-trajectory tables from an "
+                         "instrumented run's telemetry JSONL log")
+    args = ap.parse_args(argv)
     recs = load()
     n_ok = sum(1 for r in recs.values() if r.get("runnable") and "error" not in r)
     n_skip = sum(1 for r in recs.values() if not r.get("runnable", True))
@@ -103,6 +142,8 @@ def main():
     print(roofline_table(recs, "16x16"))
     print("\n## Multi-pod (2x16x16 = 512 chips) dry-run\n")
     print(dryrun_table({k: v for k, v in recs.items() if k[2] == "2x16x16"}))
+    if args.telemetry:
+        print("\n" + telemetry_tables(args.telemetry))
 
 
 if __name__ == "__main__":

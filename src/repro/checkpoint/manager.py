@@ -43,6 +43,7 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from .. import telemetry as _telemetry
 from ..distributed import fault
 
 __all__ = ["CheckpointError", "CheckpointManager"]
@@ -98,14 +99,26 @@ class CheckpointManager:
         on a daemon thread and any failure surfaces on the next
         ``save``/``wait`` call."""
         self.wait()
+        col = _telemetry.get()
         paths, vals, _ = _flatten_with_paths(tree)
-        host_vals = [np.asarray(jax.device_get(v)) for v in vals]  # snapshot
+        with col.span("checkpoint.snapshot", step=step):
+            host_vals = [np.asarray(jax.device_get(v)) for v in vals]
+        nbytes = sum(v.nbytes for v in host_vals)
 
         def write():
+            w0, t0 = time.time(), time.perf_counter()
             try:
                 self._write(step, paths, host_vals, extra or {})
             except BaseException as e:  # surfaced on next wait()
                 self._error = e
+                return
+            if col.enabled:   # emitted from the writer thread when async
+                col.span_end("checkpoint.write", w0,
+                             time.perf_counter() - t0,
+                             {"step": step, "bytes": nbytes,
+                              "blocking": blocking})
+                col.count("checkpoint.saves", 1)
+                col.count("checkpoint.bytes_written", nbytes)
 
         if blocking:
             write()
@@ -300,7 +313,8 @@ class CheckpointManager:
             if not os.path.isdir(self.step_dir(step)):
                 raise FileNotFoundError(
                     f"no checkpoint step {step} under {self.root}")
-            return self._restore_step(step, like_tree, shardings)
+            with _telemetry.get().span("checkpoint.restore", step=step):
+                return self._restore_step(step, like_tree, shardings)
         candidates = self.list_steps()
         latest = self.latest_step()
         if latest is None:
@@ -308,14 +322,22 @@ class CheckpointManager:
         # newest-first from LATEST (fallback walks strictly older steps)
         candidates = [s for s in reversed(candidates) if s <= latest]
         skipped: list[tuple[int, str]] = []
+        col = _telemetry.get()
         for s in candidates:
             try:
-                tree, extra = self._restore_step(s, like_tree, shardings)
+                with col.span("checkpoint.restore", step=s):
+                    tree, extra = self._restore_step(s, like_tree, shardings)
             except CheckpointError as e:
                 skipped.append((s, str(e)))
+                col.count("checkpoint.corrupt_skipped", 1)
                 continue
             if skipped:
                 extra["skipped_corrupt"] = skipped
+            if col.enabled:
+                col.count("checkpoint.restores", 1)
+                col.count("checkpoint.bytes_read",
+                          sum(int(getattr(v, "nbytes", 0))
+                              for v in jax.tree.leaves(tree)))
             return tree, extra
         raise CheckpointError(
             f"every checkpoint under {self.root} failed validation: "

@@ -38,17 +38,78 @@ run resumes from ``LATEST`` bit-identically to the uninterrupted run
 on the same machine (per-step math never sees the chunk boundary; only
 cross-mesh/cross-program comparisons degrade to allclose — reductions
 reassociate).
+
+Telemetry (``telemetry=`` / ``REPRO_TELEMETRY=1``): the solve is the
+subsystem's flagship instrumentation site, and it obeys the zero-host-
+sync rule — device-derived metrics (step counts, the error trajectory,
+reduction values) are harvested ONLY at host syncs that already exist:
+the chunk boundary of the checkpointing driver (which reads ``iters`` /
+``err`` anyway) and the final carry of the plain path. The traced
+program is identical with telemetry on or off; the disabled path costs
+one attribute check.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import weakref
 from typing import Any, Callable, Mapping, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
+from .. import telemetry as _telemetry
+from ..telemetry import attrib as _attrib
+
 __all__ = ["Checkpointing", "SolveResult", "make_solver", "solve_until"]
+
+# jitted-solver reuse across solve_until calls: make_solver builds a new
+# closure per call, so a bare jax.jit would retrace AND recompile every
+# solve of the same kernel — death by compile for iterative callers (and
+# it would bury the telemetry-overhead measurement under compile noise).
+# Keyed weakly on the kernel; entries hold strong refs to any jax.Array
+# scalars so their id()s can't be recycled under the key.
+_SOLVER_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _scalars_cache_key(scalars) -> Optional[tuple]:
+    """A hashable identity for a scalars dict (the values are baked into
+    the traced program as constants): plain Python numbers key by value,
+    immutable jax arrays by object identity. Anything else (e.g. a
+    mutable numpy buffer) returns None — no caching for that call."""
+    items = []
+    for k in sorted(scalars or {}):
+        v = scalars[k]
+        if isinstance(v, (bool, int, float)):
+            items.append((k, type(v).__name__, v))
+        elif isinstance(v, jax.Array):
+            items.append((k, "jax", id(v)))
+        else:
+            return None
+    return tuple(items)
+
+
+def _jitted_solver(kernel, scalars, *, check_every, error, until):
+    """The jitted driver for (kernel, scalars, policy), memoized."""
+    def build():
+        return jax.jit(make_solver(kernel, scalars, check_every=check_every,
+                                   error=error, until=until))
+
+    skey = _scalars_cache_key(scalars)
+    if skey is None:
+        return build()
+    err_key = error if (error is None or isinstance(error, str)) \
+        else id(error)
+    key = (int(check_every), err_key, until, skey)
+    try:
+        cache = _SOLVER_CACHE.setdefault(kernel, {})
+    except TypeError:                      # kernel not weak-referenceable
+        return build()
+    if key not in cache:
+        keep = [v for v in (scalars or {}).values()
+                if isinstance(v, jax.Array)]
+        cache[key] = (build(), keep)
+    return cache[key][0]
 
 
 @dataclasses.dataclass
@@ -95,6 +156,10 @@ class SolveResult:
     iters: jax.Array               # steps taken (int32)
     resumed_from: Optional[int] = None   # checkpoint step a resume started at
     saved_steps: tuple[int, ...] = ()    # steps checkpointed this run
+    # per-rank EWMA step stats from the run's StepMonitor (own rank plus
+    # every peer heartbeat), {rank: {"ewma_s", "last_s", "n"}} — None when
+    # the solve ran without a monitor
+    step_stats: Optional[dict[int, dict[str, float]]] = None
 
     def output(self, kernel) -> Any:
         """The solver's answer: the rotation target of each output holds
@@ -209,9 +274,53 @@ def _crossed(err: float, tol: float, until: str) -> bool:
     return err <= tol if until == "below" else err > tol
 
 
+def _kernel_label(kernel) -> str:
+    return getattr(kernel.fn, "__name__", "kernel")
+
+
+def _roofline(col, kernel, fields, scalars, per_step_s, check_every):
+    """Best-effort roofline-gap attribution for an instrumented solve:
+    pair measured per-step seconds with the kernel's IR cost model.
+    Kernels whose update cannot be IR-traced just skip the record."""
+    cost = _cost_model_cached(kernel, fields, scalars)
+    if cost is None:
+        return
+    _attrib.attribute(col, _kernel_label(kernel), per_step_s, cost,
+                      check_every=int(check_every), fused_checks=True)
+
+
+# the IR cost model depends only on field shapes/dtypes and the scalar
+# values, all of which are fixed across repeat solves — memoize it so
+# per-solve attribution is float math + record appends, not a re-trace
+_COST_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _cost_model_cached(kernel, fields, scalars):
+    def build():
+        try:
+            return kernel.cost_model(**fields, **(scalars or {}))
+        except Exception:
+            return None
+
+    skey = _scalars_cache_key(scalars)
+    if skey is None:
+        return build()
+    fkey = tuple(sorted((n, tuple(getattr(v, "shape", ())),
+                         str(getattr(v, "dtype", type(v).__name__)))
+                        for n, v in fields.items()))
+    key = (fkey, skey)
+    try:
+        cache = _COST_CACHE.setdefault(kernel, {})
+    except TypeError:
+        return build()
+    if key not in cache:
+        cache[key] = build()
+    return cache[key]
+
+
 def _solve_checkpointed(
     kernel, fields, scalars, *, tol, max_iters, check_every, error, until,
-    ckpt: Checkpointing,
+    ckpt: Checkpointing, col=_telemetry.NULL,
 ) -> SolveResult:
     """The chunked driver behind ``solve_until(checkpoint=...)``.
 
@@ -227,8 +336,8 @@ def _solve_checkpointed(
     save_every = int(ckpt.save_every)
     if save_every < 1:
         raise ValueError(f"save_every must be >= 1, got {save_every}")
-    solver = jax.jit(make_solver(kernel, scalars, check_every=check_every,
-                                 error=error, until=until))
+    solver = _jitted_solver(kernel, scalars, check_every=check_every,
+                            error=error, until=until)
     block = save_every * check_every
     # storage-dtype carry (same rationale as make_solver): resume-vs-
     # fresh stay bitwise because checkpoints then hold storage dtype too
@@ -243,19 +352,35 @@ def _solve_checkpointed(
         cur, reds, err = tree["fields"], tree["reds"], tree["err"]
         done = int(extra.get("iters", extra["step"]))
         resumed_from = done
+        if col.enabled:
+            col.event("solve.resume", step=done, err=float(err))
 
     plan = fault.FaultPlan.active()
     monitor = ckpt.monitor
     saved: list[int] = []
+    chunks: list[tuple[float, int]] = []   # (device seconds, steps) per chunk
     converged = done > 0 and _crossed(float(err), tol, until)
     while not converged and done < max_iters:
         take = min(block, max_iters - done)
+        w0 = time.time()
         t0 = time.perf_counter()
         cur, reds, err, it = solver(cur, tol, take)
         n = int(it)                      # chunk-boundary host sync
         dt = time.perf_counter() - t0
         done += n
         converged = _crossed(float(err), tol, until)
+        chunks.append((dt, n))
+        if col.enabled:
+            # harvest ONLY what this boundary already syncs: iters + err
+            # (+ the reduction scalars the checkpoint ships anyway)
+            per = dt / max(n, 1)
+            col.span_end("solve.chunk", w0, dt,
+                         {"steps": n, "iters": done, "err": float(err),
+                          "per_step_s": per, "cold": len(chunks) == 1})
+            col.count("solve.steps", n)
+            col.event("solve.trajectory", iters=done, err=float(err),
+                      per_step_s=per,
+                      reds={k: float(v) for k, v in reds.items()})
         if monitor is not None:
             monitor.record(done, dt / max(n, 1))
             health = monitor.check_peers()
@@ -274,9 +399,20 @@ def _solve_checkpointed(
         if plan is not None:
             plan.on_step(done)   # a kill lands between save and next chunk
     mgr.wait()                           # surface async write failures
+    stats = monitor.snapshot() if monitor is not None else None
+    if col.enabled:
+        col.gauge("solve.iters", done)
+        col.gauge("solve.err", float(err))
+        # per-step seconds for the roofline gap: warm chunks only (the
+        # first chunk pays trace+compile) unless the run was one chunk
+        warm = chunks[1:] if len(chunks) > 1 else chunks
+        steps = sum(n for _, n in warm)
+        if steps:
+            _roofline(col, kernel, cur, scalars,
+                      sum(dt for dt, _ in warm) / steps, check_every)
     return SolveResult(fields=cur, reds=reds, err=err,
                        iters=jnp.int32(done), resumed_from=resumed_from,
-                       saved_steps=tuple(saved))
+                       saved_steps=tuple(saved), step_stats=stats)
 
 
 def solve_until(
@@ -290,6 +426,7 @@ def solve_until(
     error: str | Callable | None = None,
     until: str = "below",
     checkpoint: Union[Checkpointing, str, None] = None,
+    telemetry: Any = None,
 ) -> SolveResult:
     """Iterate ``kernel`` on device until its fused error scalar crosses
     ``tol`` (or ``max_iters`` steps), checking every ``check_every``
@@ -308,15 +445,47 @@ def solve_until(
     carry is checkpointed asynchronously every ``save_every`` checks,
     and an interrupted run restarted with the same arguments resumes
     from the last atomic checkpoint (see :class:`Checkpointing`).
+
+    ``telemetry`` selects a collector: ``None`` inherits the process
+    singleton (env ``REPRO_TELEMETRY``), ``False`` forces it off,
+    ``True``/a ``Collector`` forces it on. With telemetry off this
+    function is byte-identical to the uninstrumented solve; with it on,
+    device metrics are read only at already-existing host syncs (chunk
+    boundaries / the final carry) — never inside the while_loop.
     """
+    col = _telemetry.resolve(telemetry)
     if checkpoint is not None:
         if isinstance(checkpoint, str):
             checkpoint = Checkpointing(checkpoint)
         return _solve_checkpointed(
             kernel, dict(fields), scalars, tol=tol, max_iters=max_iters,
             check_every=check_every, error=error, until=until,
-            ckpt=checkpoint)
-    solver = jax.jit(make_solver(kernel, scalars, check_every=check_every,
-                                 error=error, until=until))
+            ckpt=checkpoint, col=col)
+    solver = _jitted_solver(kernel, scalars, check_every=check_every,
+                            error=error, until=until)
+    if not col.enabled:
+        cur, reds, err, iters = solver(dict(fields), tol, max_iters)
+        return SolveResult(fields=cur, reds=reds, err=err, iters=iters)
+    # Instrumented plain path: same cached jitted solver as the disabled
+    # path (identical dispatch cost), with cold calls — the ones that
+    # paid trace+compile inside the timed window — detected via the jit
+    # cache size and excluded from roofline attribution so the gap
+    # reflects execution, not compilation.
+    size_fn = getattr(solver, "_cache_size", None)
+    before = size_fn() if size_fn is not None else None
+    w0 = time.time()
+    t0 = time.perf_counter()
     cur, reds, err, iters = solver(dict(fields), tol, max_iters)
+    it = int(jax.block_until_ready(iters))   # final-carry harvest
+    dt = time.perf_counter() - t0
+    cold = (size_fn() > before) if size_fn is not None else False
+    col.span_end("solve_until", w0, dt,
+                 {"kernel": _kernel_label(kernel), "iters": it,
+                  "err": float(err), "check_every": int(check_every),
+                  "cold": cold})
+    col.count("solve.steps", it)
+    col.gauge("solve.iters", it)
+    col.gauge("solve.err", float(err))
+    if it and not cold:
+        _roofline(col, kernel, cur, scalars, dt / it, check_every)
     return SolveResult(fields=cur, reds=reds, err=err, iters=iters)

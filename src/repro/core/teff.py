@@ -170,11 +170,38 @@ class Measurement:
     def t_eff(self, a_eff_bytes: float) -> float:
         return t_eff(a_eff_bytes, self.median_s)
 
+    # Jitter percentiles over the raw per-iteration samples: the median
+    # alone hides straggling iterations (GC pauses, a noisy neighbor, a
+    # slow link), which is exactly what a perf trajectory wants to catch.
+    @property
+    def mean_s(self) -> float:
+        return float(np.mean(self.samples_s))
+
+    @property
+    def p50_s(self) -> float:
+        return float(np.percentile(self.samples_s, 50))
+
+    @property
+    def p90_s(self) -> float:
+        return float(np.percentile(self.samples_s, 90))
+
+    @property
+    def max_s(self) -> float:
+        return float(max(self.samples_s))
+
+    def percentiles(self) -> dict[str, float]:
+        """{"mean_s", "p50_s", "p90_s", "max_s"} — the jitter summary
+        bench rows embed next to the median."""
+        return {"mean_s": self.mean_s, "p50_s": self.p50_s,
+                "p90_s": self.p90_s, "max_s": self.max_s}
+
 
 def measure(fn: Callable[[], object], iters: int = 20, warmup: int = 3,
             inner: int = 1) -> Measurement:
     """Median wall time with a bootstrap 95% CI (paper Fig. 2 methodology:
-    medians of 20 samples with confidence interval)."""
+    medians of 20 samples with confidence interval). The returned
+    :class:`Measurement` also exposes p50/p90/max per-iteration jitter
+    percentiles over the raw samples."""
     for _ in range(warmup):
         jax.block_until_ready(fn())
     samples = []

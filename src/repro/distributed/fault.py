@@ -44,6 +44,8 @@ import random
 import time
 from typing import Callable, Optional
 
+from .. import telemetry as _telemetry
+
 # exit code of a FaultPlan-injected kill: distinguishable from real crashes
 # (tracebacks exit 1) so launchers/tests can assert the *planned* death
 KILL_EXIT_CODE = 113
@@ -139,9 +141,19 @@ class StepMonitor:
         self.stats.update(dt)
         if self.heartbeat is not None:
             self.heartbeat.bump(step, ewma_s=self.stats.ewma_s)
+        col = _telemetry.get()
+        if col.enabled:
+            col.gauge("fault.ewma_step_s", self.stats.ewma_s,
+                      rank=self.host_id)
+            col.gauge("fault.last_step_s", dt, rank=self.host_id)
 
     def check_peers(self, now: Optional[float] = None) -> dict:
-        """Returns {"dead": [...], "stragglers": [...], "healthy": n}."""
+        """Returns {"dead": [...], "stragglers": [...], "healthy": n}.
+
+        With telemetry enabled the health verdict is also surfaced as
+        gauges (healthy/straggler/dead counts, per-peer heartbeat lag
+        and EWMA) — the run reports a straggling rank instead of only
+        dying on a dead one."""
         now = time.time() if now is None else now
         if self.heartbeat is None:
             return {"dead": [], "stragglers": [], "healthy": 1}
@@ -154,8 +166,38 @@ class StepMonitor:
                           if med > 0 and b["ewma_s"] > self.factor * med]
         else:
             stragglers = []
+        col = _telemetry.get()
+        if col.enabled:
+            col.gauge("fault.healthy_ranks", len(alive) - len(stragglers))
+            col.gauge("fault.straggler_ranks", len(stragglers))
+            col.gauge("fault.dead_ranks", len(dead))
+            for h, b in beats.items():
+                col.gauge("fault.heartbeat_lag_s", now - b["t"], rank=h)
+                col.gauge("fault.peer_ewma_step_s", b.get("ewma_s", 0.0),
+                          rank=h)
         return {"dead": sorted(dead), "stragglers": sorted(stragglers),
                 "healthy": len(alive) - len(stragglers)}
+
+    def snapshot(self) -> dict[int, dict[str, float]]:
+        """Per-rank EWMA step stats: this rank's live :class:`StepStats`
+        plus every peer's last heartbeat. This is what
+        :class:`~repro.core.iterate.SolveResult.step_stats` carries out
+        of a monitored solve (previously the stats died with the
+        monitor on success)."""
+        out = {self.host_id: {"ewma_s": self.stats.ewma_s,
+                              "last_s": self.stats.last_s,
+                              "n": self.stats.n}}
+        if self.heartbeat is not None:
+            for h, b in self.heartbeat.read_all().items():
+                if h != self.host_id:
+                    out[h] = {"ewma_s": b.get("ewma_s", 0.0),
+                              "last_s": b.get("ewma_s", 0.0),
+                              "n": b.get("step", 0)}
+        col = _telemetry.get()
+        if col.enabled:
+            for h, s in out.items():
+                col.gauge("fault.ewma_step_s", s["ewma_s"], rank=h)
+        return out
 
 
 def retry(fn: Callable, attempts: int = 4, backoff_s: float = 0.05,
@@ -175,6 +217,7 @@ def retry(fn: Callable, attempts: int = 4, backoff_s: float = 0.05,
         try:
             return fn()
         except exceptions:
+            _telemetry.get().count("fault.io_retries", 1)
             if i == attempts - 1:
                 raise
             wait = min(backoff_s * (2 ** i), max_backoff_s)

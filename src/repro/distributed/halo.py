@@ -16,10 +16,13 @@ from __future__ import annotations
 
 from typing import Mapping, Sequence
 
+import math
+
 import jax
 import jax.numpy as jnp
 from jax import lax
 
+from .. import telemetry as _telemetry
 from ..compat import axis_size as _axis_size
 
 
@@ -296,6 +299,107 @@ def grouped_halo_exchange(
     return out
 
 
+def _wire_bytes(n_elems: int, itemsize: int, is_float: bool,
+                compress: str | None) -> int:
+    """Wire bytes of one ppermute payload of ``n_elems`` homogeneous
+    elements under a compressed wire format (mirrors :func:`_permute`:
+    bf16 = 2 B/elt when narrowing applies; int8 = BLOCK-padded 1 B/elt
+    plus one f32 scale per block)."""
+    if compress == "bf16" and is_float and itemsize > 2:
+        return n_elems * 2
+    if compress == "int8" and is_float and itemsize > 1:
+        from .compression import BLOCK
+
+        n_blocks = -(-n_elems // BLOCK)
+        return n_blocks * BLOCK + n_blocks * 4
+    return n_elems * itemsize
+
+
+def exchange_byte_counts(
+    shapes: Mapping[str, Sequence[int]],
+    itemsizes: Mapping[str, int],
+    float_fields: Mapping[str, bool],
+    n_axes: int,
+    radius: int = 1,
+    depths: Mapping[str, object] | None = None,
+    compress: str | None = None,
+    grouped: bool = True,
+    active: Sequence[bool] | None = None,
+    dtype_groups: Sequence[Sequence[str]] | None = None,
+) -> dict:
+    """Analytic per-rank payload bytes of ONE :func:`exchange_many` call.
+
+    Pure host-side arithmetic over static shapes — safe to evaluate at
+    trace time, which is where the telemetry instrumentation calls it
+    (the counts are per exchange invocation; a solve taking N steps ships
+    N times these bytes). Returns ``{"bytes_raw": ..., "bytes_wire":
+    ..., "messages": ...}`` where *raw* prices every slab at its storage
+    width and *wire* applies the compressed format per message
+    (per dtype group when ``grouped``, per field otherwise).
+    ``active`` masks axes whose mesh extent is 1 (no messages)."""
+    names = list(shapes)
+    fdep = _field_depths(depths, names, radius, n_axes)
+    if active is None:
+        active = [True] * n_axes
+    if dtype_groups is None:
+        if grouped:
+            by_key: dict = {}
+            for f in names:
+                by_key.setdefault((itemsizes[f], float_fields[f]),
+                                  []).append(f)
+            dtype_groups = list(by_key.values())
+        else:
+            dtype_groups = [[f] for f in names]
+    raw = wire = messages = 0
+    for ax in range(n_axes):
+        if not active[ax]:
+            continue
+        for side in (0, 1):
+            for grp in dtype_groups:
+                sent = [f for f in grp if fdep[f][ax][side]]
+                if not sent:
+                    continue
+                elems = sum(
+                    fdep[f][ax][side]
+                    * math.prod(s for a, s in enumerate(shapes[f]) if a != ax)
+                    for f in sent)
+                isz = itemsizes[sent[0]]
+                is_f = float_fields[sent[0]]
+                raw += elems * isz
+                wire += _wire_bytes(elems, isz, is_f, compress)
+                messages += (2 if (compress == "int8" and is_f and isz > 1)
+                             else 1)
+    return {"bytes_raw": int(raw), "bytes_wire": int(wire),
+            "messages": int(messages)}
+
+
+def _emit_exchange_telemetry(col, fields, names, mesh_axes, radius, depths,
+                             compress, grouped):
+    """Trace-time byte accounting: fires once per compiled exchange
+    geometry (shapes are static under the trace), never per step — the
+    device program is untouched. Gauges carry per-exchange bytes;
+    multiply by the step count for totals."""
+    try:
+        active = [_axis_size(ax) > 1 for ax in mesh_axes]
+    except Exception:       # outside shard_map — assume every axis ships
+        active = None
+    shp = {f: tuple(fields[f].shape) for f in names}
+    isz = {f: jnp.asarray(fields[f]).dtype.itemsize for f in names}
+    isf = {f: jnp.issubdtype(jnp.asarray(fields[f]).dtype, jnp.floating)
+           for f in names}
+    counts = exchange_byte_counts(shp, isz, isf, len(mesh_axes),
+                                  radius=radius, depths=depths,
+                                  compress=compress, grouped=grouped,
+                                  active=active)
+    col.event("halo.exchange_traced", fields=list(names), radius=radius,
+              compress=compress, grouped=grouped, **counts)
+    col.gauge("halo.bytes_raw_per_exchange", counts["bytes_raw"],
+              compress=str(compress))
+    col.gauge("halo.bytes_wire_per_exchange", counts["bytes_wire"],
+              compress=str(compress))
+    col.count("halo.traced_exchanges", 1)
+
+
 def exchange_many(
     fields: Mapping[str, jax.Array],
     names: Sequence[str],
@@ -314,6 +418,10 @@ def exchange_many(
     ``compress`` selects the ghost wire format (``"bf16"``/``"int8"``,
     see :func:`halo_exchange`)."""
     _check_compress(compress)
+    col = _telemetry.get()
+    if col.enabled:
+        _emit_exchange_telemetry(col, fields, names, mesh_axes, radius,
+                                 depths, compress, grouped)
     if grouped:
         return grouped_halo_exchange(fields, names, mesh_axes, radius=radius,
                                      periodic=periodic, depths=depths,

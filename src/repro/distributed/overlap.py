@@ -31,6 +31,7 @@ from typing import Callable, Mapping, Sequence
 import jax
 import jax.numpy as jnp
 
+from .. import telemetry as _telemetry
 from ..core.parallel import StencilKernel
 from . import fault as _fault
 from . import halo as _halo
@@ -125,6 +126,7 @@ class MonitoredStepper:
         self.last_health = {"dead": [], "stragglers": [], "healthy": 1}
 
     def __call__(self, *args, **kwargs):
+        w0 = time.time()
         t0 = time.perf_counter()
         out = self.step(*args, **kwargs)
         out = jax.block_until_ready(out)
@@ -132,6 +134,13 @@ class MonitoredStepper:
         self.calls += 1
         self.monitor.record(self.calls * self.nsteps_per_call,
                             dt / self.nsteps_per_call)
+        col = _telemetry.get()
+        if col.enabled:
+            col.span_end("distributed.step", w0, dt,
+                         {"call": self.calls,
+                          "steps": self.nsteps_per_call,
+                          "per_step_s": dt / self.nsteps_per_call})
+            col.count("distributed.steps", self.nsteps_per_call)
         if self.calls % self.check_peers_every == 0:
             self.last_health = self.monitor.check_peers()
             if self.last_health["dead"]:

@@ -24,6 +24,7 @@ from typing import Callable, Sequence
 
 import jax.numpy as jnp
 
+from .. import telemetry as _telemetry
 from ..core import teff
 from . import stencil as _stencil
 
@@ -228,13 +229,27 @@ def autotune(
                     tiles, vmem_budget, field_offsets, prune_tag,
                     march_candidates, halos, reductions, check_every,
                     dtypes=(st.name, cd.name))
+    col = _telemetry.get()
     if key in _CACHE:
-        return _CACHE[key]
+        hit = _CACHE[key]
+        if col.enabled:
+            col.event("autotune.decision", tag=tag, cache="memory_hit",
+                      tile=hit.tile, nsteps=hit.nsteps,
+                      march_axis=hit.march_axis,
+                      per_step_s=hit.per_step_s)
+            col.count("autotune.cache_hits", 1)
+        return hit
     if cache_path and os.path.exists(cache_path):
         disk = _load_cache(cache_path)
         hit = disk.get(_key_str(key))
         if hit is not None:
             _CACHE[key] = hit
+            if col.enabled:
+                col.event("autotune.decision", tag=tag, cache="disk_hit",
+                          tile=hit.tile, nsteps=hit.nsteps,
+                          march_axis=hit.march_axis,
+                          per_step_s=hit.per_step_s)
+                col.count("autotune.cache_hits", 1)
             return hit
 
     itemsize = jnp.dtype(dtype).itemsize if itemsize is None else itemsize
@@ -296,6 +311,14 @@ def autotune(
         raise RuntimeError("no autotune candidate was runnable")
     best = dataclasses.replace(best, candidates_tried=tried,
                                candidates_pruned=pruned)
+    if col.enabled:
+        col.event("autotune.decision", tag=tag, cache="miss",
+                  tile=best.tile, nsteps=best.nsteps,
+                  march_axis=best.march_axis, per_step_s=best.per_step_s,
+                  candidates_tried=tried, candidates_pruned=pruned)
+        col.count("autotune.cache_misses", 1)
+        col.count("autotune.candidates_pruned", pruned)
+        col.count("autotune.candidates_tried", tried)
     _CACHE[key] = best
     if cache_path:
         disk = _load_cache(cache_path) if os.path.exists(cache_path) else {}

@@ -1,0 +1,239 @@
+"""The telemetry `Collector`: counters, gauges, histograms, spans, events.
+
+Two hard rules keep this subsystem honest about the engine it measures:
+
+1. **Disabled is a true no-op.** :data:`NULL` is a process-wide singleton
+   whose every method is an empty function and whose ``span()`` returns a
+   shared reusable null context manager — no allocation, no branching
+   beyond one attribute call at each instrumentation site. No file is
+   opened, nothing is imported lazily on the hot path.
+
+2. **Nothing here runs inside compiled device code.** Instrumentation
+   sites emit only from host-side control flow (chunk boundaries,
+   checkpoint writers, autotune decisions) or at *trace* time (the halo
+   byte accounting). The jitted program — and its jaxpr — is byte-for-byte
+   identical with telemetry on or off; the zero-host-sync guarantee of
+   ``solve_until`` is preserved by construction and asserted by test.
+
+Events stream to a JSONL file as they happen (one JSON object per line,
+flushed per event — events are rare: chunk boundaries, saves, decisions).
+Emission is lock-guarded because the async checkpoint writer reports from
+its background thread. The schema is documented and enforced by
+:mod:`repro.telemetry.schema`.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Any, Optional
+
+SCHEMA_VERSION = 1
+
+__all__ = ["Collector", "NullCollector", "NULL", "SCHEMA_VERSION"]
+
+
+class _NullSpan:
+    """Reusable do-nothing context manager (shared instance, zero alloc)."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class NullCollector:
+    """The disabled-mode singleton: every method is a no-op."""
+
+    __slots__ = ()
+    enabled = False
+    path = None
+
+    def count(self, name, value=1, **labels):
+        pass
+
+    def gauge(self, name, value, **labels):
+        pass
+
+    def observe(self, name, value, **labels):
+        pass
+
+    def event(self, name, **attrs):
+        pass
+
+    def span(self, name, **attrs):
+        return _NULL_SPAN
+
+    def span_end(self, name, wall_start, dur_s, attrs=None):
+        pass
+
+    def flush(self):
+        pass
+
+    def close(self):
+        pass
+
+
+NULL = NullCollector()
+
+
+class _Span:
+    """Context manager emitted by :meth:`Collector.span` — wall-clock
+    start plus a monotonic duration, recorded on exit."""
+
+    __slots__ = ("_col", "_name", "_attrs", "_t0", "_w0")
+
+    def __init__(self, col: "Collector", name: str, attrs: dict):
+        self._col = col
+        self._name = name
+        self._attrs = attrs
+
+    def __enter__(self):
+        self._w0 = time.time()
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        dur = time.perf_counter() - self._t0
+        if exc_type is not None:
+            self._attrs = dict(self._attrs, error=exc_type.__name__)
+        self._col.span_end(self._name, self._w0, dur, self._attrs)
+        return False
+
+
+def _jsonable(v):
+    """Coerce attribute values to JSON-safe scalars (device scalars and
+    numpy types arrive here; anything exotic degrades to repr)."""
+    if v is None or isinstance(v, (bool, int, float, str)):
+        return v
+    if isinstance(v, (tuple, list)):
+        return [_jsonable(x) for x in v]
+    if isinstance(v, dict):
+        return {str(k): _jsonable(x) for k, x in v.items()}
+    try:
+        import numpy as np
+
+        if isinstance(v, np.integer):
+            return int(v)
+        if isinstance(v, (np.floating, np.ndarray)) and getattr(v, "size", 2) == 1:
+            return float(v)
+    except Exception:
+        pass
+    try:
+        return float(v)  # jax device scalars
+    except Exception:
+        return repr(v)
+
+
+class Collector:
+    """An enabled telemetry collector.
+
+    ``path=None`` keeps events in memory only (``.records``) — the mode
+    tests and ad-hoc benchmarks use; a path streams JSONL write-through.
+    """
+
+    enabled = True
+
+    def __init__(self, path: Optional[str] = None, *, meta: Optional[dict] = None):
+        self.path = path
+        self.records: list[dict] = []
+        self.counters: dict[tuple, float] = {}
+        self.gauges: dict[tuple, float] = {}
+        self.hists: dict[tuple, list[float]] = {}
+        self._lock = threading.Lock()
+        self._fh = None
+        if path:
+            d = os.path.dirname(path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            self._fh = open(path, "a")
+        head = {"kind": "meta", "ts": time.time(), "schema": SCHEMA_VERSION,
+                "pid": os.getpid()}
+        head.update({k: _jsonable(v) for k, v in (meta or {}).items()})
+        self._emit(head)
+
+    # -- emission ------------------------------------------------------------
+    def _emit(self, rec: dict):
+        with self._lock:
+            self.records.append(rec)
+            if self._fh is not None:
+                self._fh.write(json.dumps(rec) + "\n")
+                self._fh.flush()
+
+    @staticmethod
+    def _key(name: str, labels: dict) -> tuple:
+        return (name, tuple(sorted(labels.items()))) if labels else (name, ())
+
+    def count(self, name: str, value: float = 1, **labels):
+        """Increment a monotonic counter; the JSONL line records the
+        increment, the in-memory total feeds the Prometheus export."""
+        labels = {k: _jsonable(v) for k, v in labels.items()}
+        k = self._key(name, labels)
+        with self._lock:
+            self.counters[k] = self.counters.get(k, 0) + value
+        rec = {"kind": "counter", "ts": time.time(), "name": name,
+               "value": _jsonable(value)}
+        if labels:
+            rec["labels"] = labels
+        self._emit(rec)
+
+    def gauge(self, name: str, value: float, **labels):
+        """Set a point-in-time value (last write wins in exports)."""
+        labels = {k: _jsonable(v) for k, v in labels.items()}
+        with self._lock:
+            self.gauges[self._key(name, labels)] = _jsonable(value)
+        rec = {"kind": "gauge", "ts": time.time(), "name": name,
+               "value": _jsonable(value)}
+        if labels:
+            rec["labels"] = labels
+        self._emit(rec)
+
+    def observe(self, name: str, value: float, **labels):
+        """Record one histogram observation (summarized at export time)."""
+        labels = {k: _jsonable(v) for k, v in labels.items()}
+        k = self._key(name, labels)
+        with self._lock:
+            self.hists.setdefault(k, []).append(float(value))
+        rec = {"kind": "observe", "ts": time.time(), "name": name,
+               "value": _jsonable(value)}
+        if labels:
+            rec["labels"] = labels
+        self._emit(rec)
+
+    def event(self, name: str, **attrs):
+        """A structured one-off event (autotune decision, resume, ...)."""
+        self._emit({"kind": "event", "ts": time.time(), "name": name,
+                    "attrs": {k: _jsonable(v) for k, v in attrs.items()}})
+
+    def span(self, name: str, **attrs):
+        """Time a ``with`` block; emits a span record on exit."""
+        return _Span(self, name, {k: _jsonable(v) for k, v in attrs.items()})
+
+    def span_end(self, name: str, wall_start: float, dur_s: float,
+                 attrs: Optional[dict] = None):
+        """Record an already-timed interval (for callers that cannot use
+        the context-manager form, e.g. async completion callbacks)."""
+        rec = {"kind": "span", "ts": wall_start, "name": name,
+               "dur_s": float(dur_s), "tid": threading.get_ident() % 100000}
+        if attrs:
+            rec["attrs"] = {k: _jsonable(v) for k, v in attrs.items()}
+        self._emit(rec)
+
+    # -- lifecycle -----------------------------------------------------------
+    def flush(self):
+        with self._lock:
+            if self._fh is not None:
+                self._fh.flush()
+
+    def close(self):
+        with self._lock:
+            if self._fh is not None:
+                self._fh.close()
+                self._fh = None

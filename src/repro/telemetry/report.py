@@ -1,0 +1,138 @@
+"""``python -m repro.telemetry.report RUN.jsonl`` — render a run's event
+log into per-phase summary tables and (optionally) the Perfetto trace.
+
+Offline companion of the live exporters: everything here is a pure
+function over the JSONL records so ``benchmarks/report.py`` can reuse the
+same tables in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from . import export, schema
+
+__all__ = ["phase_summary", "counter_totals", "last_gauges",
+           "error_trajectory", "format_table", "main"]
+
+
+def phase_summary(records) -> list[dict]:
+    """Aggregate span records by name: count, total/mean/p50/p90/max."""
+    by_name: dict[str, list[float]] = {}
+    for r in records:
+        if r.get("kind") == "span":
+            by_name.setdefault(r["name"], []).append(float(r["dur_s"]))
+    rows = []
+    for name in sorted(by_name):
+        d = by_name[name]
+        rows.append({"phase": name, "count": len(d),
+                     "total_s": float(sum(d)),
+                     "mean_s": float(np.mean(d)),
+                     "p50_s": float(np.percentile(d, 50)),
+                     "p90_s": float(np.percentile(d, 90)),
+                     "max_s": float(max(d))})
+    rows.sort(key=lambda r: -r["total_s"])
+    return rows
+
+
+def counter_totals(records) -> list[dict]:
+    totals: dict[tuple, float] = {}
+    for r in records:
+        if r.get("kind") == "counter":
+            key = (r["name"], tuple(sorted((r.get("labels") or {}).items())))
+            totals[key] = totals.get(key, 0.0) + float(r["value"])
+    return [{"counter": name, "labels": dict(labels), "total": total}
+            for (name, labels), total in sorted(totals.items())]
+
+
+def last_gauges(records) -> list[dict]:
+    last: dict[tuple, float] = {}
+    for r in records:
+        if r.get("kind") == "gauge":
+            key = (r["name"], tuple(sorted((r.get("labels") or {}).items())))
+            last[key] = float(r["value"])
+    return [{"gauge": name, "labels": dict(labels), "value": value}
+            for (name, labels), value in sorted(last.items())]
+
+
+def error_trajectory(records) -> list[dict]:
+    """(iters, err, per_step_s) from the chunk-boundary harvest events."""
+    out = []
+    for r in records:
+        if r.get("kind") == "event" and r["name"] == "solve.trajectory":
+            a = r.get("attrs", {})
+            out.append({"iters": a.get("iters"), "err": a.get("err"),
+                        "per_step_s": a.get("per_step_s")})
+    return out
+
+
+def format_table(rows: list[dict], cols: list[str],
+                 title: str | None = None) -> str:
+    """Plain fixed-width text table (markdown-pipe style)."""
+    if not rows:
+        return ""
+
+    def fmt(v):
+        if isinstance(v, float):
+            return f"{v:.4g}"
+        if isinstance(v, dict):
+            return ",".join(f"{k}={x}" for k, x in v.items()) or "-"
+        return str(v)
+
+    cells = [[fmt(r.get(c, "")) for c in cols] for r in rows]
+    widths = [max(len(c), *(len(row[i]) for row in cells))
+              for i, c in enumerate(cols)]
+    lines = []
+    if title:
+        lines.append(f"## {title}")
+    lines.append(" | ".join(c.ljust(w) for c, w in zip(cols, widths)))
+    lines.append("-|-".join("-" * w for w in widths))
+    for row in cells:
+        lines.append(" | ".join(v.ljust(w) for v, w in zip(row, widths)))
+    return "\n".join(lines)
+
+
+def render(records, out=None):
+    out = out if out is not None else sys.stdout
+    meta = next((r for r in records if r.get("kind") == "meta"), {})
+    print(f"# telemetry report (schema {meta.get('schema', '?')}, "
+          f"pid {meta.get('pid', '?')}, backend {meta.get('backend', '?')})",
+          file=out)
+    for title, rows, cols in (
+        ("Per-phase spans", phase_summary(records),
+         ["phase", "count", "total_s", "mean_s", "p50_s", "p90_s", "max_s"]),
+        ("Counters", counter_totals(records), ["counter", "labels", "total"]),
+        ("Gauges (last value)", last_gauges(records),
+         ["gauge", "labels", "value"]),
+        ("Error trajectory", error_trajectory(records),
+         ["iters", "err", "per_step_s"]),
+    ):
+        t = format_table(rows, cols, title)
+        if t:
+            print("\n" + t, file=out)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.telemetry.report",
+        description="Summarize a telemetry JSONL run log.")
+    p.add_argument("log", help="telemetry JSONL file")
+    p.add_argument("--trace", metavar="OUT.json", default=None,
+                   help="also write the Chrome/Perfetto trace here")
+    p.add_argument("--validate", action="store_true",
+                   help="schema-validate the log first (exit 1 on drift)")
+    args = p.parse_args(argv)
+    if args.validate:
+        schema.validate_file(args.log)
+    records = schema.load_records(args.log)
+    render(records)
+    if args.trace:
+        n = export.write_chrome_trace(records, args.trace)
+        print(f"\nwrote {n} trace events -> {args.trace}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,438 @@
+"""Runtime telemetry: no-op-when-disabled, JSONL/Perfetto schema,
+device-metric harvesting at existing sync points, roofline attribution.
+
+The two contracts under test:
+  * disabled mode is FREE — the global collector is the shared no-op
+    singleton and the traced solve program is byte-identical with
+    telemetry on or off (zero-host-sync rule);
+  * enabled mode writes schema-valid JSONL whose records carry the
+    chunk spans / error trajectory / checkpoint latencies / roofline
+    fractions the observability issue names.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import telemetry
+from repro.core import fd3d, init_parallel_stencil, iterate, teff
+from repro.distributed import fault, halo
+from repro.telemetry import attrib, export, report, schema
+
+ERR = {"err": "max_abs_diff(T2, T)"}
+
+
+@pytest.fixture(autouse=True)
+def _clean_telemetry():
+    """Every test starts and ends with the env-default (disabled) state."""
+    telemetry.reset()
+    yield
+    telemetry.reset()
+
+
+def diffusion_kernel(reductions=ERR):
+    ps = init_parallel_stencil(backend="jnp", ndims=3)
+
+    @ps.parallel(outputs=("T2",), rotations={"T2": "T"},
+                 reductions=reductions)
+    def kern(T2, T, Ci, lam, dt, _dx, _dy, _dz):
+        return {"T2": fd3d.inn(T) + dt * (lam * fd3d.inn(Ci) * (
+            fd3d.d2_xi(T) * _dx ** 2 + fd3d.d2_yi(T) * _dy ** 2 +
+            fd3d.d2_zi(T) * _dz ** 2))}
+
+    return kern
+
+
+def setup3d(rng, shape=(12, 12, 12)):
+    T = jnp.asarray(rng.rand(*shape), jnp.float32)
+    Ci = jnp.asarray(rng.rand(*shape) + 0.5, jnp.float32)
+    sc = dict(lam=1.0, dt=0.05, _dx=1.0, _dy=1.0, _dz=1.0)
+    return T, Ci, sc
+
+
+# ---------------------------------------------------------------- disabled
+def test_disabled_is_shared_noop_singleton(monkeypatch):
+    monkeypatch.delenv("REPRO_TELEMETRY", raising=False)
+    telemetry.reset()
+    col = telemetry.get()
+    assert col is telemetry.NULL and not col.enabled
+    assert telemetry.get() is col                 # cached, not re-resolved
+    # span() hands back ONE shared reusable null context manager
+    s1, s2 = col.span("a"), col.span("b", attr=1)
+    assert s1 is s2
+    with s1 as s:
+        assert s is s1
+    # every no-op path returns None and records nothing
+    assert col.count("c") is None and col.gauge("g", 1.0) is None
+    assert col.observe("h", 0.5) is None and col.event("e") is None
+    col.span_end("x", 0.0, 1.0)
+    col.flush(), col.close()
+    # module-level conveniences route through the same singleton
+    telemetry.count("c"), telemetry.gauge("g", 1), telemetry.event("e")
+    assert not telemetry.enabled()
+
+
+def test_env_enables_and_configure_overrides(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TELEMETRY", str(tmp_path / "run.jsonl"))
+    telemetry.reset()
+    col = telemetry.get()
+    assert col.enabled and col.path == str(tmp_path / "run.jsonl")
+    col2 = telemetry.configure(None)       # programmatic override
+    assert telemetry.get() is col2 and col2.path is None
+    telemetry.reset()
+    monkeypatch.setenv("REPRO_TELEMETRY", "0")
+    telemetry.reset()
+    assert telemetry.get() is telemetry.NULL
+
+
+def test_resolve_kwarg_contract():
+    assert telemetry.resolve(False) is telemetry.NULL
+    col = telemetry.Collector(None)
+    assert telemetry.resolve(col) is col
+    assert telemetry.resolve(None) is telemetry.get()
+    forced = telemetry.resolve(True)
+    assert forced.enabled
+
+
+def test_traced_program_identical_on_off(rng):
+    """Zero-host-sync rule, jaxpr-asserted: the solver's traced program
+    does not change when a collector is active."""
+    T, Ci, sc = setup3d(rng, shape=(8, 8, 8))
+    kern = diffusion_kernel()
+    args = (dict(T2=T, T=T, Ci=Ci), 1e-5, 50)
+    off = str(jax.make_jaxpr(iterate.make_solver(kern, sc, check_every=2))(
+        *args))
+    telemetry.configure(None)              # enabled, in-memory
+    on = str(jax.make_jaxpr(iterate.make_solver(kern, sc, check_every=2))(
+        *args))
+    assert on == off
+    assert "callback" not in on and "outside_call" not in on
+
+
+def test_disabled_solve_unperturbed(rng):
+    T, Ci, sc = setup3d(rng)
+    kern = diffusion_kernel()
+    r0 = iterate.solve_until(kern, dict(T2=T, T=T, Ci=Ci), sc, tol=2e-5,
+                             max_iters=200, check_every=5, telemetry=False)
+    col = telemetry.Collector(None)
+    r1 = iterate.solve_until(kern, dict(T2=T, T=T, Ci=Ci), sc, tol=2e-5,
+                             max_iters=200, check_every=5, telemetry=col)
+    # instrumented run: same math, bit-identical result
+    assert int(r0.iters) == int(r1.iters)
+    np.testing.assert_array_equal(np.asarray(r0.fields["T"]),
+                                  np.asarray(r1.fields["T"]))
+    assert any(r["kind"] == "span" and r["name"] == "solve_until"
+               for r in col.records)
+
+
+def test_solver_cache_reused_across_calls(rng):
+    T, Ci, sc = setup3d(rng, shape=(8, 8, 8))
+    kern = diffusion_kernel()
+    s1 = iterate._jitted_solver(kern, sc, check_every=5, error=None,
+                                until="below")
+    s2 = iterate._jitted_solver(kern, sc, check_every=5, error=None,
+                                until="below")
+    assert s1 is s2
+    s3 = iterate._jitted_solver(kern, sc, check_every=3, error=None,
+                                until="below")
+    assert s3 is not s1
+    # unhashable scalars (mutable numpy buffer) opt out of the cache
+    s4 = iterate._jitted_solver(kern, dict(sc, lam=np.array(1.0)),
+                                check_every=5, error=None, until="below")
+    assert s4 is not s1
+
+
+# ----------------------------------------------------------------- enabled
+def _run_checkpointed(rng, tmp_path, log="run.jsonl"):
+    T, Ci, sc = setup3d(rng)
+    kern = diffusion_kernel()
+    path = str(tmp_path / log)
+    # the GLOBAL collector, as REPRO_TELEMETRY= would install it: the
+    # checkpoint/fault subsystems emit through the process singleton
+    col = telemetry.configure(path)
+    mon = fault.StepMonitor(host_id=0, heartbeat_dir=str(tmp_path / "hb"))
+    ck = iterate.Checkpointing(str(tmp_path / "ck"), save_every=2,
+                               blocking=False, monitor=mon)
+    res = iterate.solve_until(kern, dict(T2=T, T=T, Ci=Ci), sc, tol=2e-5,
+                              max_iters=200, check_every=5, checkpoint=ck)
+    telemetry.reset()                       # close + flush the log
+    return res, col, path
+
+
+def test_enabled_chunked_jsonl_schema_and_content(rng, tmp_path):
+    res, col, path = _run_checkpointed(rng, tmp_path)
+    counts = schema.validate_file(path)          # raises on any drift
+    assert counts["meta"] == 1 and counts["span"] > 0
+    records = schema.load_records(path)
+    names = {(r["kind"], r.get("name")) for r in records}
+    assert ("span", "solve.chunk") in names
+    assert ("span", "checkpoint.snapshot") in names
+    assert ("span", "checkpoint.write") in names
+    assert ("event", "solve.trajectory") in names
+    assert ("event", "roofline") in names
+    assert ("counter", "solve.steps") in names
+    assert ("counter", "checkpoint.saves") in names
+    assert ("gauge", "fault.ewma_step_s") in names
+    # chunk spans carry the boundary harvest; steps sum to the iter count
+    chunks = [r for r in records
+              if r["kind"] == "span" and r["name"] == "solve.chunk"]
+    assert sum(c["attrs"]["steps"] for c in chunks) == int(res.iters)
+    assert chunks[0]["attrs"]["cold"] is True
+    traj = [r for r in records
+            if r["kind"] == "event" and r["name"] == "solve.trajectory"]
+    errs = [t["attrs"]["err"] for t in traj]
+    assert errs[-1] == pytest.approx(float(res.err))
+    assert all(e >= errs[-1] for e in errs[:1])  # diffusion decays
+    # roofline attribution present with a sane fraction
+    roof = [r for r in records
+            if r["kind"] == "event" and r["name"] == "roofline"]
+    assert 0 < roof[-1]["attrs"]["roofline_fraction"]
+    # StepMonitor surfaced on the result
+    assert res.step_stats is not None and 0 in res.step_stats
+    assert res.step_stats[0]["ewma_s"] > 0
+
+
+def test_resume_event_and_restore_span(rng, tmp_path):
+    T, Ci, sc = setup3d(rng)
+    kern = diffusion_kernel()
+    ck = iterate.Checkpointing(str(tmp_path / "ck"), save_every=1,
+                               blocking=True)
+    iterate.solve_until(kern, dict(T2=T, T=T, Ci=Ci), sc, tol=0.0,
+                        max_iters=10, check_every=5, checkpoint=ck,
+                        telemetry=False)
+    col2 = telemetry.configure(None)        # restore emits via the global
+    res = iterate.solve_until(kern, dict(T2=T, T=T, Ci=Ci), sc, tol=0.0,
+                              max_iters=20, check_every=5, checkpoint=ck)
+    assert res.resumed_from == 10
+    ev = [r for r in col2.records
+          if r["kind"] == "event" and r["name"] == "solve.resume"]
+    assert ev and ev[0]["attrs"]["step"] == 10
+    assert any(r["kind"] == "span" and r["name"] == "checkpoint.restore"
+               for r in col2.records)
+    assert any(r["kind"] == "counter" and r["name"] == "checkpoint.restores"
+               for r in col2.records)
+
+
+def test_chrome_trace_export(rng, tmp_path):
+    _, _, path = _run_checkpointed(rng, tmp_path)
+    records = schema.load_records(path)
+    out = str(tmp_path / "trace.json")
+    n = export.write_chrome_trace(records, out)
+    trace = json.load(open(out))
+    evs = trace["traceEvents"]
+    assert n == len(evs) > 0
+    phases = {e["ph"] for e in evs}
+    assert "X" in phases and "C" in phases     # spans + counters
+    for e in evs:
+        if e["ph"] == "X":
+            assert e["dur"] >= 0 and e["ts"] >= 0
+    assert any(e["ph"] == "M" and e["name"] == "process_name" for e in evs)
+
+
+def test_prometheus_export():
+    col = telemetry.Collector(None)
+    col.count("solve.steps", 30)
+    col.count("solve.steps", 12)
+    col.gauge("roofline.fraction", 0.83, kernel="kern")
+    col.observe("chunk_s", 0.1)
+    col.observe("chunk_s", 0.3)
+    text = export.prometheus_text(col)
+    assert "repro_solve_steps_total 42" in text
+    assert 'repro_roofline_fraction{kernel="kern"} 0.83' in text
+    assert 'quantile="0.5"' in text and "repro_chunk_s_count 2" in text
+
+
+def test_schema_rejects_drift(tmp_path):
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text(json.dumps({"kind": "meta", "ts": 0.0, "schema": 1,
+                               "pid": 1}) + "\n" +
+                   json.dumps({"kind": "span", "ts": 1.0, "name": "x",
+                               "dur_s": -2.0}) + "\n")
+    with pytest.raises(schema.SchemaError, match="dur_s"):
+        schema.validate_file(str(bad))
+    # CLI surface: exit 1 + INVALID verdict
+    assert schema.main([str(bad)]) == 1
+
+
+def test_report_cli(rng, tmp_path, capsys):
+    _, _, path = _run_checkpointed(rng, tmp_path)
+    trace = str(tmp_path / "trace.json")
+    assert report.main([path, "--validate", "--trace", trace]) == 0
+    out = capsys.readouterr().out
+    assert "Per-phase spans" in out
+    assert "solve.chunk" in out
+    assert "Error trajectory" in out
+    assert os.path.exists(trace)
+
+
+# ---------------------------------------------------------------- roofline
+def test_roofline_fraction_hand_computed(rng):
+    """roofline_fraction on the 3-D diffusion kernel against hand math:
+    frac = t_model / t_measured and t_eff_measured = A_eff / t_measured,
+    with an explicit HardwareSpec so nothing depends on the host."""
+    shape = (16, 16, 16)
+    kern = diffusion_kernel()
+    sc = dict(lam=1.0, dt=0.05, _dx=1.0, _dy=1.0, _dz=1.0)
+    cost = kern.cost_model(T2=shape, T=shape, Ci=shape, **sc)
+    hw = teff.HardwareSpec("unit", peak_bw=100e9, peak_flops=1e12)
+    per_step_s = 1e-3
+    col = telemetry.Collector(None)
+    out = attrib.attribute(col, "kern", per_step_s, cost, hw=hw)
+    t_model = cost.predict_per_step_s(shape, 1, hw)
+    a = cost.a_eff_bytes(1)
+    assert out["roofline_fraction"] == pytest.approx(t_model / per_step_s)
+    assert out["t_eff_measured"] == pytest.approx(a / per_step_s)
+    assert out["t_eff_model"] == pytest.approx(a / t_model)
+    gauges = [r for r in col.records if r["kind"] == "gauge"]
+    byname = {g["name"]: g for g in gauges}
+    assert byname["roofline.fraction"]["value"] == pytest.approx(
+        t_model / per_step_s)
+    assert byname["roofline.fraction"]["labels"] == {"kernel": "kern"}
+    assert attrib.attribute(col, "kern", 0.0, cost, hw=hw) == {}
+
+
+def test_default_hardware_env_pin(monkeypatch):
+    monkeypatch.setenv("REPRO_TELEMETRY_BW_GBS", "123")
+    monkeypatch.setenv("REPRO_TELEMETRY_FLOPS_G", "456")
+    attrib.reset_hardware_cache()
+    hw = attrib.default_hardware()
+    assert hw.peak_bw == pytest.approx(123e9)
+    assert hw.peak_flops == pytest.approx(456e9)
+    assert attrib.default_hardware() is hw       # cached
+    attrib.reset_hardware_cache()
+
+
+# ------------------------------------------------------------- halo bytes
+def test_exchange_byte_counts_hand_checked():
+    shapes = {"A": (8, 6), "B": (8, 6)}
+    isz = {"A": 4, "B": 4}
+    isf = {"A": True, "B": True}
+    # one mesh axis, radius 1, grouped: per side one message of
+    # 2 fields * 1 plane * 6 elems = 12 f32 -> 48 B; two sides
+    c = halo.exchange_byte_counts(shapes, isz, isf, n_axes=1)
+    assert c == {"bytes_raw": 96, "bytes_wire": 96, "messages": 2}
+    # bf16 wire: 2 B/elt
+    c = halo.exchange_byte_counts(shapes, isz, isf, 1, compress="bf16")
+    assert c["bytes_raw"] == 96 and c["bytes_wire"] == 48
+    # int8 wire: BLOCK-padded q payload + one f32 scale per block,
+    # and a second message (the scales) per slab
+    from repro.distributed.compression import BLOCK
+    c = halo.exchange_byte_counts(shapes, isz, isf, 1, compress="int8")
+    assert c["bytes_wire"] == 2 * (BLOCK + 4)
+    assert c["messages"] == 4
+    # inactive axes ship nothing
+    c = halo.exchange_byte_counts(shapes, isz, isf, 1, active=[False])
+    assert c == {"bytes_raw": 0, "bytes_wire": 0, "messages": 0}
+    # ungrouped: one message per field per side
+    c = halo.exchange_byte_counts(shapes, isz, isf, 1, grouped=False)
+    assert c["messages"] == 4 and c["bytes_raw"] == 96
+    # int-typed fields never compress
+    c = halo.exchange_byte_counts({"M": (8, 6)}, {"M": 1}, {"M": False}, 1,
+                                  compress="bf16")
+    assert c["bytes_wire"] == c["bytes_raw"] == 12
+
+
+def test_exchange_telemetry_emission():
+    """The instrumentation hook itself: analytic counts from static
+    shapes, no device work (outside shard_map the axis probe fails ->
+    every axis is assumed active)."""
+    col = telemetry.Collector(None)
+    A = jnp.ones((8, 6), jnp.float32)
+    halo._emit_exchange_telemetry(col, dict(A=A), ("A",), ("x",),
+                                  radius=1, depths=None, compress=None,
+                                  grouped=True)
+    ev = [r for r in col.records
+          if r["kind"] == "event" and r["name"] == "halo.exchange_traced"]
+    assert ev
+    a = ev[-1]["attrs"]
+    # one plane of 6 f32 per side, two sides: 48 raw bytes, 2 messages
+    assert a["bytes_raw"] == a["bytes_wire"] == 48
+    assert a["messages"] == 2 and a["fields"] == ["A"]
+    assert any(r["kind"] == "counter" and r["name"] == "halo.traced_exchanges"
+               for r in col.records)
+    assert any(r["kind"] == "gauge"
+               and r["name"] == "halo.bytes_wire_per_exchange"
+               for r in col.records)
+
+
+# ---------------------------------------------------------------- autotune
+def test_autotune_decision_events():
+    from repro.kernels import autotune
+
+    telemetry.configure(None)
+    col = telemetry.get()
+
+    def make_step(tile, k):
+        return lambda: jnp.zeros(())
+
+    kw = dict(shape=(32, 32), dtype="float32", radius=1, n_fields=3,
+              nsteps_candidates=(1,), tiles=[(32, 32), (8, 32)], iters=1,
+              tag="telemetry-unit")
+    autotune.autotune(make_step, **kw)
+    autotune.autotune(make_step, **kw)
+    evs = [r["attrs"]["cache"] for r in col.records
+           if r["kind"] == "event" and r["name"] == "autotune.decision"]
+    assert evs[0] == "miss" and "memory_hit" in evs[1:]
+    miss = [r for r in col.records
+            if r["kind"] == "event" and r["name"] == "autotune.decision"
+            and r["attrs"]["cache"] == "miss"][0]
+    assert miss["attrs"]["candidates_tried"] == 2
+
+
+# -------------------------------------------------------------- percentiles
+def test_measurement_percentiles():
+    samples = [0.1, 0.2, 0.3, 0.4, 1.0]
+    m = teff.Measurement(median_s=0.3, ci95_s=(0.1, 1.0), samples_s=samples)
+    assert m.p50_s == pytest.approx(0.3)
+    assert m.max_s == pytest.approx(1.0)
+    assert m.mean_s == pytest.approx(0.4)
+    assert m.p50_s <= m.p90_s <= m.max_s
+    p = m.percentiles()
+    assert set(p) == {"mean_s", "p50_s", "p90_s", "max_s"}
+
+
+def test_measure_exposes_percentiles():
+    m = teff.measure(lambda: jnp.zeros(8) + 1, iters=5, warmup=1)
+    assert len(m.samples_s) == 5
+    assert m.p50_s <= m.max_s
+    assert m.percentiles()["max_s"] == max(m.samples_s)
+
+
+# ----------------------------------------------------------------- overhead
+def test_telemetry_overhead_under_2pct(rng):
+    """Acceptance bound: <2% per-step overhead with telemetry on at 128^3
+    on the jnp backend. The traced program is identical (asserted above),
+    so the only added cost is a handful of host-side record appends per
+    solve; min-over-samples comparison with retries keeps the check
+    robust to shared-host noise."""
+    shape = (128, 128, 128)
+    T = jnp.asarray(rng.rand(*shape), jnp.float32)
+    Ci = jnp.ones(shape, jnp.float32)
+    sc = dict(lam=1.0, dt=1e-3, _dx=1.0, _dy=1.0, _dz=1.0)
+    kern = diffusion_kernel()
+    fields = dict(T2=T, T=T, Ci=Ci)
+    col = telemetry.Collector(None)
+    attrib.default_hardware()   # resolve the STREAM peak outside the timing
+
+    def run(sel):
+        res = iterate.solve_until(kern, fields, sc, tol=0.0, max_iters=20,
+                                  check_every=5, telemetry=sel)
+        jax.block_until_ready(res.err)
+
+    run(False), run(col)        # warm: compile once, AOT-compile once
+    last = None
+    for _ in range(3):          # retry against host noise
+        off, on = [], []
+        import time
+        for _ in range(4):      # interleaved: both see the same drift
+            t0 = time.perf_counter(); run(False)
+            off.append(time.perf_counter() - t0)
+            t0 = time.perf_counter(); run(col)
+            on.append(time.perf_counter() - t0)
+        last = min(on) / min(off) - 1.0
+        if last < 0.02:
+            break
+    assert last < 0.02, f"telemetry overhead {last:.3%} >= 2%"
