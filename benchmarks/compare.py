@@ -1,8 +1,9 @@
 """Perf-regression guard over the BENCH_*.json trajectories.
 
 The benchmark records were append-only JSON with no reader; this closes
-the loop for BOTH record families: within each scanned group
-(``BENCH_teff*.json`` and ``BENCH_solvers*.json`` by default), the
+the loop for every record family: within each scanned group
+(``BENCH_teff*.json``, ``BENCH_solvers*.json``, ``BENCH_scaling*.json``
+and ``BENCH_serve*.json`` by default), the
 newest record's rows are diffed against the most recent older record
 that shares the same row key and a compatible ``_meta.py`` stamp (same
 jax backend — a CPU record is never judged against a TPU one), and any
@@ -13,7 +14,9 @@ storage ``dtype`` — absent on pre-mixed-precision rows, so old baselines
 keep matching; the ``BENCH_teff_mixed_*.json`` family rides the same
 ``BENCH_teff*.json`` glob and is guarded per dtype);
 solver records (nested dicts) key by (solver, variant, n) — e.g.
-``("porosity", "jnp", 64)``, ``("gp", "fused_k2", 32)``. Interpret-mode
+``("porosity", "jnp", 64)``, ``("gp", "fused_k2", 32)``;
+serve records (``kind: "serve"``) key by (mode, n, requests, max_batch)
+on per-SOLVE seconds — e.g. ``("batched", 16, 16, 8)``. Interpret-mode
 ``pallas`` solver timings are skipped (correctness-path records, pure
 noise), as are the unjitted ``broadcast`` teff baselines.
 
@@ -94,9 +97,22 @@ def solver_rows(rec: dict) -> dict:
     return rows
 
 
+def serve_rows(rec: dict) -> dict:
+    """Flatten a BENCH_serve record into ``(mode, n, requests,
+    max_batch) -> per-solve seconds`` — the serving layer's analogue of
+    per-step time, so the same threshold guards it."""
+    return {(r.get("name"), r.get("n"), r.get("requests"),
+             r.get("max_batch")): float(r["per_solve_s"])
+            for r in rec.get("rows", [])
+            if isinstance(r, dict) and "per_solve_s" in r}
+
+
 def record_rows(rec: dict) -> dict:
-    """Row-key -> per-step time for either record family (auto-detected:
-    teff records carry a rows LIST, solver records a rows DICT)."""
+    """Row-key -> per-step time for any record family (auto-detected:
+    serve records carry kind="serve", teff records a rows LIST, solver
+    records a rows DICT)."""
+    if rec.get("kind") == "serve":
+        return serve_rows(rec)
     if isinstance(rec.get("rows"), dict):
         return solver_rows(rec)
     return teff_rows(rec)
@@ -192,7 +208,7 @@ def scan_group(dirname: str, pattern: str, threshold: float) -> list[str]:
 
 
 DEFAULT_PATTERNS = ("BENCH_teff*.json", "BENCH_solvers*.json",
-                    "BENCH_scaling*.json")
+                    "BENCH_scaling*.json", "BENCH_serve*.json")
 
 
 def main(argv=None) -> int:

@@ -57,11 +57,15 @@ from typing import Any, Callable, Mapping, Optional, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .. import telemetry as _telemetry
 from ..telemetry import attrib as _attrib
 
-__all__ = ["Checkpointing", "SolveResult", "make_solver", "solve_until"]
+__all__ = [
+    "Checkpointing", "SolveResult", "make_solver", "solve_until",
+    "BatchCarry", "BatchedSolveResult", "make_batched_solver", "solve_batch",
+]
 
 # jitted-solver reuse across solve_until calls: make_solver builds a new
 # closure per call, so a bare jax.jit would retrace AND recompile every
@@ -353,7 +357,12 @@ def _solve_checkpointed(
         done = int(extra.get("iters", extra["step"]))
         resumed_from = done
         if col.enabled:
-            col.event("solve.resume", step=done, err=float(err))
+            ev = {"step": done, "err": float(err)}
+            if extra.get("skipped_corrupt"):
+                # torn steps the fallback walked past (step, reason)
+                ev["skipped_corrupt"] = [s for s, _ in
+                                         extra["skipped_corrupt"]]
+            col.event("solve.resume", **ev)
 
     plan = fault.FaultPlan.active()
     monitor = ckpt.monitor
@@ -489,3 +498,335 @@ def solve_until(
     if it and not cold:
         _roofline(col, kernel, cur, scalars, dt / it, check_every)
     return SolveResult(fields=cur, reds=reds, err=err, iters=iters)
+
+
+# ---------------------------------------------------------------------------
+# batch-axis solves: many independent samples through one device loop
+# ---------------------------------------------------------------------------
+#
+# The serving scenario ("millions of users") is many SMALL independent
+# solves — per-request scalars and initial conditions on a common grid —
+# not one giant grid. A batched solver stacks them on a leading sample
+# axis and advances the whole ensemble inside ONE jitted lax.while_loop:
+# the per-sample step is the kernel's single-source jnp realization under
+# jax.vmap (XLA fuses the batch axis like any other — on small grids the
+# stacked step also uses the machine far better than B undersized
+# launches), per-sample fused reductions come back as (B,) vectors, and a
+# per-sample ACTIVE mask freezes finished samples — a converged, bad, or
+# out-of-budget sample's buffers stop changing bitwise while stragglers
+# continue — which is exactly the masking that lets a serving layer
+# refill finished slots between chunks (continuous batching).
+#
+# Numerical health rides in the same loop: a `finite` reduction epilogue
+# over the first output turns NaN/Inf into a per-sample indicator at
+# check boundaries with zero extra HBM passes or host syncs; the loop
+# retires poisoned samples (quarantine) instead of letting one diverging
+# request wedge the batch (a NaN error would otherwise compare False
+# against tol and masquerade as converged).
+
+
+GUARD_NAME = "__finite"   # reserved reduction name for the health guard
+
+
+@dataclasses.dataclass
+class BatchCarry:
+    """The device-resident state of a batched solve: every leaf carries a
+    leading sample axis of extent B. Chunked drivers thread this through
+    repeated jitted calls; all leaves are device values."""
+
+    fields: dict[str, jax.Array]   # {name: (B, *grid)} double buffers
+    reds: dict[str, jax.Array]     # {name: (B,)} last check's reductions
+    err: jax.Array                 # (B,) f32 last error (±inf before first)
+    steps: jax.Array               # (B,) i32 per-sample steps taken
+    active: jax.Array              # (B,) bool — still iterating
+    converged: jax.Array           # (B,) bool — crossed its own tol
+    bad: jax.Array                 # (B,) bool — non-finite detected
+
+    def tuple(self):
+        return (self.fields, self.reds, self.err, self.steps, self.active,
+                self.converged, self.bad)
+
+    @classmethod
+    def from_tuple(cls, t):
+        return cls(*t)
+
+
+@dataclasses.dataclass
+class BatchedSolveResult:
+    """Final state of :func:`solve_batch` (leading sample axis B).
+
+    ``converged[b]`` — sample crossed its own tol; ``bad[b]`` — the
+    finite guard tripped (NaN/Inf detected at a check boundary; the
+    sample's buffers hold the detecting check's state and may contain
+    non-finite values — consumers report the quarantine, not the
+    payload); ``expired[b]`` — neither: the sample ran out of its step
+    budget."""
+
+    fields: dict[str, jax.Array]
+    reds: dict[str, jax.Array]
+    err: jax.Array
+    iters: jax.Array
+    converged: jax.Array
+    bad: jax.Array
+
+    @property
+    def expired(self) -> jax.Array:
+        return ~(self.converged | self.bad)
+
+    def output(self, kernel) -> Any:
+        tgts = {o: self.fields[t] for o, t in kernel.rotations.items()}
+        if len(kernel.outputs) == 1:
+            return tgts[kernel.outputs[0]]
+        return tgts
+
+
+def batchable_kernel(kernel):
+    """The kernel variant a batched solve vmaps: the single-source update
+    through the jnp (XLA-fused) realization, marching disabled (the
+    sample axis is the parallel axis that feeds the machine; plane
+    streaming inside a vmap adds nothing on bucket-sized grids). A
+    pallas-backend kernel is re-bound to the jnp backend — same update
+    fn, outputs, rotations, bcs and reductions, so results agree to
+    reassociation (the paper's xPU single-source property is what makes
+    this a one-liner)."""
+    ps = kernel.ps
+    if ps.backend == "jnp" and kernel.march_axis is None:
+        return kernel
+    from .parallel import StencilKernel
+
+    ps2 = dataclasses.replace(ps, backend="jnp") if ps.backend != "jnp" \
+        else ps
+    return StencilKernel(ps2, kernel.fn, kernel.outputs, kernel.radius,
+                         kernel.tile, kernel.vmem_budget, kernel.rotations,
+                         kernel.bc, None, kernel.reductions)
+
+
+def make_batched_solver(
+    kernel,
+    *,
+    check_every: int = 1,
+    error: str | Callable | None = None,
+    until: str = "below",
+    guard: bool = True,
+):
+    """Build the un-jitted batched driver
+    ``solver(carry, scalars, tol, budget, max_steps) -> carry``.
+
+    ``carry`` is a :class:`BatchCarry` tuple (see :meth:`BatchCarry.tuple`),
+    ``scalars`` maps every scalar argument to a ``(B,)`` vector (each
+    sample runs its own parameters), ``tol`` is a ``(B,)`` per-sample
+    tolerance, ``budget`` a ``(B,)`` per-sample step cap (a deadline
+    expressed in steps), and ``max_steps`` bounds this CALL — the loop
+    exits when every sample is inactive or ``max_steps`` more steps have
+    run, whichever first (chunked serving drivers pass their chunk size;
+    :func:`solve_batch` passes the full budget).
+
+    Semantics per check boundary (every ``check_every`` steps):
+
+    * every ACTIVE sample advances; frozen samples are carried through
+      ``jnp.where`` untouched (bitwise);
+    * the per-sample fused error is compared against the sample's own
+      tol (``until`` as in :func:`solve_until`);
+    * with ``guard=True`` a ``finite`` reduction epilogue over the first
+      output retires samples that went NaN/Inf (``bad``) the moment a
+      check detects them, and a NaN error can never masquerade as
+      convergence (the guard indicator is NaN-free by construction and
+      takes precedence over the tol test);
+    * a sample whose ``steps`` reached its budget goes inactive without
+      ``converged`` or ``bad`` (the caller reads that as expiry).
+    """
+    if not kernel.reductions:
+        raise ValueError(
+            "batched solves need a kernel with fused reductions "
+            "(declare reductions={'err': 'max_abs_diff(T2, T)'}-style on "
+            "@parallel)"
+        )
+    err_fn = _resolve_error(kernel, error)   # against the DECLARED set
+    kernel = batchable_kernel(kernel)
+    rot = kernel.rotations
+    if not rot or set(kernel.outputs) - set(rot):
+        raise ValueError(
+            "batched solves rotate double buffers between steps and need "
+            "rotations covering every output (pass rotations={'T2': 'T'}-"
+            "style mapping to @parallel)"
+        )
+    check_every = int(check_every)
+    if check_every < 1:
+        raise ValueError(f"check_every must be >= 1, got {check_every}")
+    if until not in ("below", "above"):
+        raise ValueError(f"until must be 'below' or 'above', got {until!r}")
+    plain = kernel.with_reductions(None)
+    if guard:
+        from ..ir import Reduction
+
+        if GUARD_NAME in kernel.reductions:
+            raise ValueError(f"reduction name {GUARD_NAME!r} is reserved "
+                             "for the batched health guard")
+        checked = kernel.with_reductions(
+            dict(kernel.reductions,
+                 **{GUARD_NAME: Reduction("finite", kernel.outputs[0])}))
+    else:
+        checked = kernel
+    single = len(kernel.outputs) == 1
+    red_names = tuple(kernel.reductions)
+
+    def as_dict(res):
+        return {kernel.outputs[0]: res} if single else dict(res)
+
+    def rotate(cur, outs):
+        cur = dict(cur)
+        for o, tgt in rot.items():
+            cur[o], cur[tgt] = cur[tgt], outs[o]
+        return cur
+
+    def sample_step(f, s):
+        """One sample's check block: m-1 plain steps + 1 checked step."""
+        cur = f
+        for _ in range(check_every - 1):
+            cur = rotate(cur, as_dict(plain(**cur, **s)))
+        outs, reds = checked(**cur, **s)
+        cur = rotate(cur, as_dict(outs))
+        return cur, {n: jnp.asarray(v, jnp.float32)
+                     for n, v in reds.items()}
+
+    def solver(carry, scalars, tol, budget, max_steps):
+        cur, reds, err, steps, active, converged, bad = carry
+        tol = jnp.asarray(tol, jnp.float32)
+        budget = jnp.asarray(budget, jnp.int32)
+        max_steps = jnp.asarray(max_steps, jnp.int32)
+
+        def cond(state):
+            (_, _, _, _, active, _, _), t = state
+            return jnp.any(active) & (t < max_steps)
+
+        def body(state):
+            (cur, reds, err, steps, active, converged, bad), t = state
+            new_cur, new_reds = jax.vmap(sample_step)(cur, scalars)
+            new_err = jnp.asarray(
+                jax.vmap(lambda r: err_fn(
+                    {n: r[n] for n in red_names}))(new_reds), jnp.float32)
+            if guard:
+                nonfin = (new_reds[GUARD_NAME] > 0) | ~jnp.isfinite(new_err)
+            else:
+                nonfin = ~jnp.isfinite(new_err)
+
+            def freeze(new, old):
+                keep = active.reshape(active.shape + (1,) * (new.ndim - 1))
+                return jnp.where(keep, new, old)
+
+            cur = {n: freeze(new_cur[n], cur[n]) for n in cur}
+            reds = {n: jnp.where(active, new_reds[n], reds[n])
+                    for n in red_names}
+            err = jnp.where(active, new_err, err)
+            steps = steps + jnp.where(active, check_every, 0)
+            newly_bad = active & nonfin
+            crossed = (err <= tol) if until == "below" else (err > tol)
+            newly_conv = active & ~newly_bad & crossed
+            bad = bad | newly_bad
+            converged = converged | newly_conv
+            active = active & ~newly_bad & ~newly_conv & (steps < budget)
+            return ((cur, reds, err, steps, active, converged, bad),
+                    t + check_every)
+
+        state = ((cur, reds, err, steps, active, converged, bad),
+                 jnp.int32(0))
+        final, _ = jax.lax.while_loop(cond, body, state)
+        return final
+
+    return solver
+
+
+# batched jitted solvers, memoized exactly like _SOLVER_CACHE (the key
+# adds the batch extent + field shapes: the closure itself is shape-
+# polymorphic, but one jit per (kernel, policy) signature suffices)
+_BATCH_SOLVER_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def jitted_batched_solver(kernel, *, check_every=1, error=None,
+                          until="below", guard=True):
+    """The jitted driver for (kernel, policy), memoized on the kernel."""
+    err_key = error if (error is None or isinstance(error, str)) \
+        else id(error)
+    key = (int(check_every), err_key, until, bool(guard))
+    try:
+        cache = _BATCH_SOLVER_CACHE.setdefault(kernel, {})
+    except TypeError:
+        cache = None
+    if cache is not None and key in cache:
+        return cache[key]
+    solver = jax.jit(
+        make_batched_solver(kernel, check_every=check_every, error=error,
+                            until=until, guard=guard),
+        static_argnums=())
+    if cache is not None:
+        cache[key] = solver
+    return solver
+
+
+def init_batch_carry(kernel, fields: Mapping[str, Any],
+                     until: str = "below",
+                     active: Any = None) -> BatchCarry:
+    """A fresh :class:`BatchCarry` from stacked initial fields
+    ``{name: (B, *grid)}`` (cast to the kernel's storage dtype).
+    ``active`` preselects live samples (default: all)."""
+    st = kernel.ps.dtype
+    cur = {n: jnp.asarray(v, st) for n, v in fields.items()}
+    b = next(iter(cur.values())).shape[0]
+    for n, v in cur.items():
+        if v.shape[0] != b:
+            raise ValueError(
+                f"field {n!r} has batch extent {v.shape[0]} != {b}; all "
+                "stacked fields must share the leading sample axis")
+    err0 = jnp.full((b,), jnp.inf if until == "below" else -jnp.inf,
+                    jnp.float32)
+    active = (jnp.ones((b,), bool) if active is None
+              else jnp.asarray(active, bool))
+    return BatchCarry(
+        fields=cur,
+        reds={n: jnp.zeros((b,), jnp.float32) for n in kernel.reductions},
+        err=err0,
+        steps=jnp.zeros((b,), jnp.int32),
+        active=active,
+        converged=jnp.zeros((b,), bool),
+        bad=jnp.zeros((b,), bool),
+    )
+
+
+def solve_batch(
+    kernel,
+    fields: Mapping[str, Any],
+    scalars: Mapping[str, Any] | None = None,
+    *,
+    tol: Any,
+    max_iters: Any,
+    check_every: int = 1,
+    error: str | Callable | None = None,
+    until: str = "below",
+    guard: bool = True,
+) -> BatchedSolveResult:
+    """Solve B independent samples to their own convergence in ONE jitted
+    device loop (see :func:`make_batched_solver` for the semantics).
+
+    ``fields`` maps every field argument to a stacked ``(B, *grid)``
+    array; ``scalars`` maps every scalar argument to a ``(B,)`` vector or
+    a python number (broadcast to all samples). ``tol`` and ``max_iters``
+    are likewise per-sample vectors or broadcast scalars. The loop runs
+    until every sample converged, tripped the finite guard, or exhausted
+    its own ``max_iters`` — finished samples freeze bitwise while
+    stragglers continue."""
+    carry = init_batch_carry(kernel, fields, until=until)
+    b = carry.err.shape[0]
+    scal = {n: jnp.broadcast_to(jnp.asarray(v), (b,))
+            for n, v in (scalars or {}).items()}
+    tolv = jnp.broadcast_to(jnp.asarray(tol, jnp.float32), (b,))
+    budget = jnp.broadcast_to(jnp.asarray(max_iters, jnp.int32), (b,))
+    solver = jitted_batched_solver(kernel, check_every=check_every,
+                                   error=error, until=until, guard=guard)
+    # cap = the largest per-sample budget, rounded up to a whole check
+    cap = int(np.ceil(int(np.max(np.asarray(budget))) / check_every)
+              ) * check_every
+    final = solver(carry.tuple(), scal, tolv, budget, cap)
+    out = BatchCarry.from_tuple(final)
+    return BatchedSolveResult(fields=out.fields, reds=out.reds, err=out.err,
+                              iters=out.steps, converged=out.converged,
+                              bad=out.bad)

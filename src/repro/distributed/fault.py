@@ -247,7 +247,20 @@ class FaultPlan:
     partially-flushed save that atomic-rename cannot catch.
     ``io_errors`` makes the next N guarded I/O operations raise
     :class:`TransientIOError` (consumed by :meth:`on_io`), exercising
-    the retry paths."""
+    the retry paths. ``kill_at_io`` dies mid-write: the N-th guarded
+    I/O operation (1-based) ``os._exit``s the process INSIDE the write
+    path — the window where a SIGKILL tears an in-flight checkpoint.
+
+    Serving-path injections (consumed by ``repro.serve``):
+    ``nan_at_step`` poisons sample ``nan_sample`` of every submitted
+    batch with NaN once its step counter passes the threshold (the
+    quarantine path); ``reject_after`` makes the request queue shed
+    every admission after the N-th (backpressure under a full queue
+    without needing real overload); ``kill_worker_after`` kills the
+    worker process after it completes N batches (circuit breaker +
+    re-queue); ``batch_errors`` makes the next N batch executions
+    raise :class:`TransientIOError` before touching the device (the
+    batch retry-with-backoff path)."""
 
     kill_at_step: Optional[int] = None
     hang_at_step: Optional[int] = None
@@ -255,8 +268,17 @@ class FaultPlan:
     rank: int = 0                 # rank this plan applies to (default all == 0)
     corrupt_checkpoint: Optional[int] = None
     io_errors: int = 0
+    kill_at_io: Optional[int] = None
+    nan_at_step: Optional[int] = None
+    nan_sample: int = 0
+    reject_after: Optional[int] = None
+    kill_worker_after: Optional[int] = None
+    batch_errors: int = 0
     _saves_seen: int = dataclasses.field(default=0, repr=False)
     _killed: bool = dataclasses.field(default=False, repr=False)
+    _io_seen: int = dataclasses.field(default=0, repr=False)
+    _submits_seen: int = dataclasses.field(default=0, repr=False)
+    _batches_done: int = dataclasses.field(default=0, repr=False)
 
     # ---------------- construction ----------------
     @classmethod
@@ -321,10 +343,45 @@ class FaultPlan:
             os._exit(KILL_EXIT_CODE)
 
     def on_io(self, path: str = "") -> None:
-        """Raise a transient error while the injection budget lasts."""
+        """Raise a transient error while the injection budget lasts, or
+        die outright on the scheduled guarded operation (``kill_at_io``
+        models SIGKILL landing mid-write: no unwind, no flush)."""
+        self._io_seen += 1
+        if self.kill_at_io is not None and self._io_seen >= self.kill_at_io:
+            os._exit(KILL_EXIT_CODE)
         if self.io_errors > 0:
             self.io_errors -= 1
             raise TransientIOError(f"injected transient I/O error ({path})")
+
+    # ---------------- serving-path hooks ----------------
+    def on_submit(self) -> bool:
+        """Called by the request queue per admission attempt. True ->
+        shed this request (deterministic overload)."""
+        self._submits_seen += 1
+        return (self.reject_after is not None
+                and self._submits_seen > self.reject_after)
+
+    def on_batch(self) -> None:
+        """Called by the batch engine before each batch execution; burns
+        the transient-batch-failure budget (retry path)."""
+        if self.batch_errors > 0:
+            self.batch_errors -= 1
+            raise TransientIOError("injected transient batch failure")
+
+    def serve_nan_due(self, step: int) -> Optional[int]:
+        """The sample index to poison with NaN once a batch's step
+        counter passes ``nan_at_step`` (None -> no injection)."""
+        if self.nan_at_step is not None and step >= self.nan_at_step:
+            return self.nan_sample
+        return None
+
+    def worker_batch_done(self) -> None:
+        """Called by the worker after each completed batch; dies when
+        the scheduled batch count is reached (worker-kill injection)."""
+        self._batches_done += 1
+        if (self.kill_worker_after is not None
+                and self._batches_done >= self.kill_worker_after):
+            os._exit(KILL_EXIT_CODE)
 
     def after_save(self, ckpt_dir: str) -> None:
         """Called after each completed checkpoint write with its final

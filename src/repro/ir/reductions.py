@@ -17,6 +17,17 @@ Kinds (all elementwise-map then associative-combine):
   * ``max_abs_diff(F, G)``  — ``max |F - G|``        (convergence check)
   * ``sum(F)``              — ``sum F``              (conserved quantity)
   * ``sum_sq(F)``           — ``sum F^2``            (L2 norm sq. / mass)
+  * ``finite(F)``           — ``max 1[!isfinite F]`` (health guard: 0 iff
+    every element is finite, 1 as soon as any NaN/Inf appears)
+  * ``nan_count(F)``        — ``sum 1[!isfinite F]`` (how many cells blew up)
+
+The ``finite``/``nan_count`` kinds fold a *non-finite indicator* — the
+elementwise map turns NaN/Inf into exactly ``1.0`` and everything else
+into ``0.0`` BEFORE the combine, so (unlike a raw ``max``) the folded
+scalar is NaN-free and safe to branch on inside a ``lax.while_loop``.
+They are the device-resident numerical health guard of the serving
+layer (``repro.serve`` quarantines samples whose guard goes positive),
+but work standalone like any other kind.
 
 Operands name *fields of the launch*: an output operand reduces the
 freshly written values, an input operand the current (boundary-source)
@@ -43,7 +54,12 @@ REDUCTION_KINDS = {
     "max_abs_diff": (2, "max"),
     "sum": (1, "sum"),
     "sum_sq": (1, "sum"),
+    "finite": (1, "max"),       # max of the non-finite indicator
+    "nan_count": (1, "sum"),    # count of non-finite cells
 }
+
+# kinds whose elementwise map is the non-finite indicator
+_INDICATOR_KINDS = ("finite", "nan_count")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +109,19 @@ class Reduction:
             return abs(x - y)
         if self.kind == "sum":
             return x
+        if self.kind in _INDICATOR_KINDS:
+            # Non-finite indicator: 1.0 where NaN/Inf, else 0.0. On the
+            # symbolic trace the indicator costs one compare-class op per
+            # element with the operand's own footprint — modeled as the
+            # |.|-node (same reads, adds-class flop) since SymArray has
+            # no isfinite.
+            if hasattr(x, "flop_kind"):      # SymArray (IR trace)
+                return abs(x)
+            import jax.numpy as jnp
+
+            return (~jnp.isfinite(x)).astype(
+                x.dtype if jnp.issubdtype(x.dtype, jnp.floating)
+                else jnp.float32)
         return x * x  # sum_sq
 
     def fold(self, mapped, mask=None):

@@ -1,12 +1,26 @@
-"""Serving driver: continuous batched decode against prefix caches.
+"""LM-decode example driver — NOT the simulation-serving entry point.
+
+The production serving layer for the repo's headline workload
+(iterative stencil solves) is :mod:`repro.serve`::
+
+    PYTHONPATH=src python -m repro.serve --demo
+
+which provides the hardened path: a bounded request queue with
+backpressure and load-shedding, continuous batching with per-sample
+convergence masking, per-request deadlines, NaN/Inf quarantine via the
+device-resident finite guard, retry-with-backoff, and a worker
+circuit-breaker/supervisor. See the README's "Serving" section and
+``repro/serve/__init__.py`` for the API.
+
+This module remains as the minimal *sequence-model* analogue used by
+``examples/serve_lm.py`` and the system test: one jitted prefill then a
+jitted single-token decode step (greedy or temperature sampling) over a
+fixed synthetic batch — a shape-reference for decode-style serving, with
+none of the robustness machinery. Its ``__main__`` forwards to
+``repro.serve`` unless ``--arch`` explicitly selects the LM demo::
 
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --smoke \
         --batch 4 --prompt-len 32 --gen-len 32
-
-The loop is the production shape: one jitted prefill, then a jitted
-single-token decode step driven by a simple request queue (greedy or
-temperature sampling). On the production mesh the same step functions are
-what dryrun.py lowers for the decode_32k / long_500k cells.
 """
 from __future__ import annotations
 
@@ -82,19 +96,29 @@ def serve(arch: str, scfg: ServeConfig, rc: Optional[RunConfig] = None,
                  "tok_per_s": tok_s}
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=list(configs.ARCH_IDS))
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="LM-decode example driver. For simulation serving "
+                    "use `python -m repro.serve --demo` (repro.serve).")
+    ap.add_argument("--arch", choices=list(configs.ARCH_IDS),
+                    help="run the LM-decode example for this arch; "
+                         "without it, forwards to repro.serve")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
-    args = ap.parse_args()
+    args, rest = ap.parse_known_args(argv)
+    if args.arch is None:
+        # the documented serving entry point lives in repro.serve
+        from ..serve.__main__ import main as serve_main
+
+        return serve_main(rest or ["--demo"])
     serve(args.arch, ServeConfig(batch=args.batch, prompt_len=args.prompt_len,
                                  gen_len=args.gen_len,
                                  temperature=args.temperature),
           smoke=args.smoke)
+    return 0
 
 
 if __name__ == "__main__":

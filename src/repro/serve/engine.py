@@ -1,0 +1,251 @@
+"""The batch engine: fixed-width device batches with continuous refill.
+
+One :class:`BatchState` owns ``max_batch`` SLOTS over a single grid
+bucket. The carry is the batched solver's (see
+:func:`repro.core.iterate.make_batched_solver`); a slot is either bound
+to a ticket or dead (masked inactive — dead slots cost flops, not
+correctness, and keep the jitted program's shapes fixed so it compiles
+ONCE per bucket). Each :meth:`run_chunk` advances every live slot by up
+to ``policy.chunk`` steps in one jitted call; between chunks the host
+
+  * harvests finished slots (converged / quarantined / out-of-budget)
+    and resolves their tickets with results or pointed errors,
+  * fails live slots whose deadline passed (``DeadlineExceeded``),
+  * refills freed slots from the queue (continuous batching: stragglers
+    keep marching while new requests join at chunk boundaries),
+  * applies the ``nan_at_step`` fault injection (poisons the scheduled
+    sample's buffers so the device-side finite guard must catch it).
+
+Transient batch failures (``FaultPlan.on_batch`` or a flaky runtime)
+are retried with exponential backoff through ``fault.retry``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .. import telemetry as _telemetry
+from ..core import iterate
+from ..distributed import fault
+from . import errors
+from .queue import Ticket
+
+__all__ = ["BatchEngine", "BatchState"]
+
+
+class BatchState:
+    """Slot table + device carry for one in-flight batch."""
+
+    def __init__(self, engine: "BatchEngine", tickets: list[Ticket]):
+        self.engine = engine
+        pol = engine.policy
+        kernel = engine.kernel
+        b = pol.max_batch
+        if len(tickets) > b:
+            raise ValueError(f"{len(tickets)} tickets > max_batch {b}")
+        self.slots: list[Optional[Ticket]] = list(tickets) + [None] * (
+            b - len(tickets))
+        t0 = tickets[0].request
+        self.scalar_names = tuple(sorted(t0.scalars))
+        self.bucket = t0.bucket
+        for t in tickets:
+            self._check_compatible(t)
+        stacked = {
+            n: jnp.stack([
+                jnp.asarray(self.slots[i].request.fields[n], kernel.ps.dtype)
+                if self.slots[i] is not None
+                else jnp.zeros(t0.fields[n].shape, kernel.ps.dtype)
+                for i in range(b)])
+            for n in t0.fields}
+        self.carry = iterate.init_batch_carry(
+            kernel, stacked,
+            active=np.array([s is not None for s in self.slots]))
+        self.injected = False       # nan_at_step fires once per batch
+        self.started_at = time.monotonic()
+
+    def _check_compatible(self, t: Ticket):
+        if t.request.bucket != self.bucket:
+            raise ValueError(
+                f"request {t.request.request_id!r} bucket does not match "
+                "the batch (grid-bucketed queues should prevent this)")
+        if tuple(sorted(t.request.scalars)) != self.scalar_names:
+            raise ValueError(
+                f"request {t.request.request_id!r} scalars "
+                f"{tuple(sorted(t.request.scalars))} != batch scalars "
+                f"{self.scalar_names}; one bucket must share scalar names")
+
+    # -- slot views ----------------------------------------------------------
+    @property
+    def live(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    @property
+    def n_live(self) -> int:
+        return len(self.live)
+
+    def _vec(self, get, fill, dtype):
+        return np.array([fill if s is None else get(s)
+                         for s in self.slots], dtype)
+
+    def scalar_vectors(self) -> dict:
+        return {n: self._vec(lambda s, n=n: s.request.scalars[n], 0.0,
+                             np.float32)
+                for n in self.scalar_names}
+
+    # -- refill --------------------------------------------------------------
+    def bind(self, slot: int, ticket: Ticket) -> None:
+        """Bind a fresh ticket to a freed slot: reset its per-sample
+        carry state and write its initial fields."""
+        self._check_compatible(ticket)
+        if self.slots[slot] is not None:
+            raise ValueError(f"slot {slot} still bound")
+        self.slots[slot] = ticket
+        kernel = self.engine.kernel
+        c = self.carry
+        for n, v in ticket.request.fields.items():
+            c.fields[n] = c.fields[n].at[slot].set(
+                jnp.asarray(v, kernel.ps.dtype))
+        inf = np.inf if self.engine.policy.until == "below" else -np.inf
+        c.err = c.err.at[slot].set(np.float32(inf))
+        c.steps = c.steps.at[slot].set(0)
+        c.active = c.active.at[slot].set(True)
+        c.converged = c.converged.at[slot].set(False)
+        c.bad = c.bad.at[slot].set(False)
+
+    def release(self, slot: int) -> Ticket:
+        t = self.slots[slot]
+        self.slots[slot] = None
+        self.carry.active = self.carry.active.at[slot].set(False)
+        return t
+
+    def deactivate(self, slot: int) -> None:
+        self.carry.active = self.carry.active.at[slot].set(False)
+
+    def poison(self, slot: int) -> None:
+        """NaN the slot's buffers (fault injection: the finite guard in
+        the DEVICE loop must detect and quarantine it)."""
+        c = self.carry
+        for n in c.fields:
+            c.fields[n] = c.fields[n].at[slot].set(jnp.nan)
+        self.injected = True
+
+    def result_for(self, slot: int) -> dict:
+        """Materialize one finished slot's payload."""
+        c = self.carry
+        return {
+            "fields": {n: np.asarray(v[slot]) for n, v in c.fields.items()},
+            "reds": {n: float(v[slot]) for n, v in c.reds.items()},
+            "err": float(c.err[slot]),
+            "iters": int(c.steps[slot]),
+        }
+
+
+class BatchEngine:
+    """Builds/caches the jitted batched solver and advances BatchStates."""
+
+    def __init__(self, kernel, policy):
+        self.kernel = kernel
+        self.policy = policy
+        self._solver = iterate.jitted_batched_solver(
+            kernel, check_every=policy.check_every, error=policy.error,
+            until=policy.until)
+
+    def start(self, tickets: list[Ticket]) -> BatchState:
+        return BatchState(self, tickets)
+
+    def run_chunk(self, state: BatchState) -> None:
+        """One jitted advance of up to ``policy.chunk`` steps, retried
+        on transient failure. Raises the final failure when the retry
+        budget is exhausted (the worker's breaker counts those)."""
+        pol = self.policy
+        c = state.carry
+        scal = {n: jnp.asarray(v) for n, v in state.scalar_vectors().items()}
+        tol = state._vec(lambda s: s.request.tol, 0.0, np.float32)
+        budget = state._vec(lambda s: s.request.max_iters, 0, np.int32)
+        plan = fault.FaultPlan.active()
+        calls = {"n": 0}
+
+        def exec_once():
+            calls["n"] += 1
+            if plan is not None:
+                plan.on_batch()
+            return self._solver(c.tuple(), scal, tol, budget, pol.chunk)
+
+        col = _telemetry.get()
+        with col.span("serve.chunk", live=state.n_live):
+            final = fault.retry(exec_once, attempts=pol.retry_attempts,
+                                backoff_s=pol.retry_backoff_s,
+                                exceptions=(fault.TransientIOError,))
+        if calls["n"] > 1:
+            col.count("serve.batch_retries", calls["n"] - 1)
+        state.carry = iterate.BatchCarry.from_tuple(final)
+
+    # -- host-side pass between chunks --------------------------------------
+    def harvest(self, state: BatchState) -> list[int]:
+        """Resolve finished slots; fail expired live slots; apply the
+        nan_at_step injection. Returns the freed slot indices."""
+        col = _telemetry.get()
+        c = state.carry
+        # ONE host sync for the whole batch state (chunk boundary — the
+        # same sync the refill decision needs anyway)
+        active = np.asarray(c.active)
+        converged = np.asarray(c.converged)
+        bad = np.asarray(c.bad)
+        steps = np.asarray(c.steps)
+        err = np.asarray(c.err)
+        now = time.monotonic()
+        freed: list[int] = []
+
+        plan = fault.FaultPlan.active()
+        if plan is not None and not state.injected:
+            victim = plan.serve_nan_due(int(steps[state.live[0]])
+                                        if state.live else 0)
+            if victim is not None and victim < len(state.slots) \
+                    and state.slots[victim] is not None and active[victim]:
+                state.poison(victim)
+                col.event("serve.fault_injected", kind="nan",
+                          slot=victim,
+                          request=state.slots[victim].request.request_id)
+
+        for i, ticket in enumerate(state.slots):
+            if ticket is None:
+                continue
+            if not active[i]:
+                t = state.release(i)
+                freed.append(i)
+                if bad[i]:
+                    col.count("serve.quarantined", 1)
+                    t.fail(errors.SampleQuarantined(
+                        t.request.request_id, int(steps[i])))
+                elif converged[i]:
+                    col.count("serve.completed", 1)
+                    t.resolve(state.result_for(i))
+                else:
+                    col.count("serve.budget_exhausted", 1)
+                    t.fail(errors.BudgetExhausted(
+                        t.request.request_id, int(steps[i]),
+                        float(err[i])))
+            elif ticket.expired(now):
+                state.deactivate(i)
+                t = state.release(i)
+                freed.append(i)
+                col.count("serve.expired", 1, where="in_batch")
+                t.fail(errors.DeadlineExceeded(
+                    t.request.request_id, t.request.deadline_s, "in_batch"))
+        return freed
+
+    def expire_all(self, state: BatchState, where: str) -> None:
+        """Batch-level timeout: fail every still-live slot."""
+        col = _telemetry.get()
+        for i in list(state.live):
+            state.deactivate(i)
+            t = state.release(i)
+            col.count("serve.expired", 1, where=where)
+            t.fail(errors.DeadlineExceeded(
+                t.request.request_id,
+                t.request.deadline_s
+                if t.request.deadline_s is not None
+                else self.policy.batch_timeout_s, where))

@@ -20,6 +20,19 @@ flushed per event — events are rare: chunk boundaries, saves, decisions).
 Emission is lock-guarded because the async checkpoint writer reports from
 its background thread. The schema is documented and enforced by
 :mod:`repro.telemetry.schema`.
+
+A third rule joined with the serving layer: **telemetry must never kill
+the solve it observes.** The JSONL writer is plumbing on a filesystem
+that can hiccup (flaky NFS, full disk, an injected
+``REPRO_FAULT_PLAN`` transient-IO budget), so every file write runs
+through :func:`repro.distributed.fault.retry` and, when the retries are
+exhausted, degrades to dropping THAT line — the record stays in memory,
+the ``telemetry.dropped_records`` counter ticks, and the caller never
+sees the exception. Because ``fault.retry`` itself counts its retries
+through this collector, the write path keeps a thread-local reentrancy
+guard: nested emissions defer their lines and are flushed best-effort
+after the outer write completes (no deadlock on the non-reentrant lock,
+no unbounded recursion while the filesystem is down).
 """
 from __future__ import annotations
 
@@ -32,6 +45,11 @@ from typing import Any, Optional
 SCHEMA_VERSION = 1
 
 __all__ = ["Collector", "NullCollector", "NULL", "SCHEMA_VERSION"]
+
+
+class _SinkClosed(Exception):
+    """Internal: the JSONL file handle was closed mid-write (shutdown
+    race) — NOT an OSError, so fault.retry does not retry/count it."""
 
 
 class _NullSpan:
@@ -141,6 +159,13 @@ class Collector:
 
     enabled = True
 
+    # retry policy for JSONL writes: quick, bounded — telemetry is not
+    # worth stalling a solve for; a line that cannot land in ~3 tries on
+    # a ~10ms backoff is dropped (counted) rather than waited on
+    IO_ATTEMPTS = 3
+    IO_BACKOFF_S = 0.01
+    IO_MAX_BACKOFF_S = 0.1
+
     def __init__(self, path: Optional[str] = None, *, meta: Optional[dict] = None):
         self.path = path
         self.records: list[dict] = []
@@ -148,14 +173,28 @@ class Collector:
         self.gauges: dict[tuple, float] = {}
         self.hists: dict[tuple, list[float]] = {}
         self._lock = threading.Lock()
+        self._tls = threading.local()
         self._fh = None
         if path:
             d = os.path.dirname(path)
             if d:
                 os.makedirs(d, exist_ok=True)
-            self._fh = open(path, "a")
+            from ..distributed import fault  # lazy: fault imports telemetry
+
+            try:
+                self._fh = fault.retry(
+                    lambda: (fault.FaultPlan.active_on_io(path),
+                             open(path, "a"))[1],
+                    attempts=self.IO_ATTEMPTS, backoff_s=self.IO_BACKOFF_S,
+                    max_backoff_s=self.IO_MAX_BACKOFF_S)
+            except OSError:
+                # the sink never comes up: degrade to memory-only rather
+                # than kill the caller; every would-be line counts dropped
+                self._fh = None
         head = {"kind": "meta", "ts": time.time(), "schema": SCHEMA_VERSION,
                 "pid": os.getpid()}
+        if path and self._fh is None:
+            head["sink_degraded"] = True
         head.update({k: _jsonable(v) for k, v in (meta or {}).items()})
         self._emit(head)
 
@@ -163,9 +202,60 @@ class Collector:
     def _emit(self, rec: dict):
         with self._lock:
             self.records.append(rec)
-            if self._fh is not None:
-                self._fh.write(json.dumps(rec) + "\n")
+            fh = self._fh
+        if self.path is None:
+            return
+        line = json.dumps(rec) + "\n"
+        if fh is None:
+            self._drop()
+            return
+        tls = self._tls
+        if getattr(tls, "writing", False):
+            # nested emission from inside the guarded write (fault.retry
+            # counting its own retries) — defer; the outer write flushes
+            tls.pending.append(line)
+            return
+        tls.writing, tls.pending = True, []
+        try:
+            self._write_guarded(line)
+            while tls.pending:
+                self._write_guarded(tls.pending.pop(0))
+        finally:
+            tls.writing = False
+
+    def _write_guarded(self, line: str):
+        """One retried JSONL write; exhaustion drops the line (counted),
+        never raises."""
+        from ..distributed import fault  # lazy: fault imports telemetry
+
+        def write():
+            fault.FaultPlan.active_on_io(self.path)
+            with self._lock:
+                if self._fh is None:
+                    raise _SinkClosed  # closed under us: drop silently
+                self._fh.write(line)
                 self._fh.flush()
+
+        try:
+            fault.retry(write, attempts=self.IO_ATTEMPTS,
+                        backoff_s=self.IO_BACKOFF_S,
+                        max_backoff_s=self.IO_MAX_BACKOFF_S)
+        except _SinkClosed:
+            pass
+        except OSError:
+            self._drop()
+
+    def _drop(self):
+        """Account one dropped JSONL line. In-memory only BY DESIGN: a
+        drop means the sink is failing, so emitting a record about it
+        would recurse into the same failing write."""
+        with self._lock:
+            k = ("telemetry.dropped_records", ())
+            self.counters[k] = self.counters.get(k, 0) + 1
+
+    @property
+    def dropped_records(self) -> int:
+        return int(self.counters.get(("telemetry.dropped_records", ()), 0))
 
     @staticmethod
     def _key(name: str, labels: dict) -> tuple:

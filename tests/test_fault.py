@@ -569,3 +569,109 @@ def test_decompose_gather_roundtrip(rng):
     assert st["T"].shape[0] == 4
     back = elastic.gather_fields(st, (4,), radius=1)
     np.testing.assert_array_equal(back["T"], g)
+
+
+# ---------------------------------------------------------------------------
+# SIGKILL landing DURING an async CheckpointManager.save (kill_at_io):
+# LATEST must stay on the previous good step, the torn in-flight step is
+# skipped, and resume is bitwise (the PR-6 edge this pins down)
+# ---------------------------------------------------------------------------
+_ASYNC_SAVE_KILL_CHILD = r"""
+import os, numpy as np, jax.numpy as jnp
+from repro.core import fd3d, init_parallel_stencil, iterate
+
+ps = init_parallel_stencil(backend="jnp", ndims=3)
+
+@ps.parallel(outputs=("T2",), rotations={"T2": "T"},
+             reductions={"err": "max_abs_diff(T2, T)"})
+def kern(T2, T, dt):
+    return {"T2": fd3d.inn(T) + dt * (fd3d.d2_xi(T) + fd3d.d2_yi(T)
+                                      + fd3d.d2_zi(T))}
+
+n = 16
+T0 = jnp.zeros((n, n, n), jnp.float32).at[n//2, n//2, n//2].set(1.0)
+ck = iterate.Checkpointing(os.environ["CKPT_DIR"], save_every=2,
+                           blocking=False)   # ASYNC writer thread
+res = iterate.solve_until(kern, dict(T2=T0, T=T0), dict(dt=1e-3),
+                          tol=0.0, max_iters=60, check_every=5,
+                          checkpoint=ck)
+np.save(os.environ["OUT_NPY"], np.asarray(res.fields["T"]))
+print("DONE", int(res.iters), res.resumed_from)
+"""
+
+
+def _carry_like(n=16):
+    z = np.zeros((n, n, n), np.float32)
+    return {"fields": {"T": z, "T2": z},
+            "reds": {"err": np.float32(0.0)}, "err": np.float32(0.0)}
+
+
+def test_kill_during_async_save_leaves_latest_good_and_resumes_bitwise(
+        tmp_path):
+    ck, out = str(tmp_path / "ck"), str(tmp_path / "out.npy")
+    ref = str(tmp_path / "ref.npy")
+    env = {"CKPT_DIR": ck, "OUT_NPY": out}
+
+    # each save guards 6 I/O ops (4 tensors + manifest + LATEST swap);
+    # op 8 is the 2nd tensor write of the SECOND save -> the process
+    # dies inside the async writer with step_20 still a .tmp dir
+    plan = fault.FaultPlan(kill_at_io=8)
+    p = run_proc(_ASYNC_SAVE_KILL_CHILD,
+                 env_extra=dict(env, **{fault.PLAN_ENV: plan.to_env()}))
+    assert p.returncode == fault.KILL_EXIT_CODE, (p.stdout, p.stderr)
+    assert not os.path.exists(out)
+
+    mgr = CheckpointManager(ck)
+    assert mgr.latest_step() == 10          # LATEST: previous good step
+    assert mgr.list_steps() == [10]         # torn step not listed
+    assert os.path.isdir(mgr.step_dir(20) + ".tmp")  # the wreck
+
+    # resume (no plan): picks up from 10 and completes
+    p = run_proc(_ASYNC_SAVE_KILL_CHILD, env_extra=env)
+    assert p.returncode == 0, (p.stdout, p.stderr)
+    assert "DONE 60 10" in p.stdout
+
+    # uninterrupted reference in a fresh process: bitwise equal
+    p = run_proc(_ASYNC_SAVE_KILL_CHILD,
+                 env_extra={"CKPT_DIR": str(tmp_path / "ck_ref"),
+                            "OUT_NPY": ref})
+    assert p.returncode == 0, (p.stdout, p.stderr)
+    np.testing.assert_array_equal(np.load(out), np.load(ref))
+
+
+def test_torn_inflight_step_promoted_by_storage_is_skipped_corrupt(
+        tmp_path):
+    """The uglier crash window: the storage layer completed the rename
+    and LATEST update but the tensor data never hit the platter (write
+    reordering on power cut). restore(step=None) must walk past the torn
+    step, record it in skipped_corrupt, and land on the previous good
+    one; a checkpointed solve resumes from it bitwise."""
+    ck, out = str(tmp_path / "ck"), str(tmp_path / "out.npy")
+    ref = str(tmp_path / "ref.npy")
+    env = {"CKPT_DIR": ck, "OUT_NPY": out}
+    plan = fault.FaultPlan(kill_at_io=8)
+    p = run_proc(_ASYNC_SAVE_KILL_CHILD,
+                 env_extra=dict(env, **{fault.PLAN_ENV: plan.to_env()}))
+    assert p.returncode == fault.KILL_EXIT_CODE, (p.stdout, p.stderr)
+
+    # simulate the reordered-storage outcome: the torn dir appears
+    # completed and LATEST names it
+    mgr = CheckpointManager(ck)
+    os.rename(mgr.step_dir(20) + ".tmp", mgr.step_dir(20))
+    with open(os.path.join(ck, "LATEST"), "w") as f:
+        f.write(os.path.basename(mgr.step_dir(20)))
+
+    assert mgr.latest_step() == 20
+    tree, extra = mgr.restore(_carry_like())
+    assert extra["step"] == 10
+    assert [s for s, _ in extra["skipped_corrupt"]] == [20]
+
+    # the checkpointed solve takes the same fallback and stays bitwise
+    p = run_proc(_ASYNC_SAVE_KILL_CHILD, env_extra=env)
+    assert p.returncode == 0, (p.stdout, p.stderr)
+    assert "DONE 60 10" in p.stdout
+    p = run_proc(_ASYNC_SAVE_KILL_CHILD,
+                 env_extra={"CKPT_DIR": str(tmp_path / "ck_ref"),
+                            "OUT_NPY": ref})
+    assert p.returncode == 0, (p.stdout, p.stderr)
+    np.testing.assert_array_equal(np.load(out), np.load(ref))

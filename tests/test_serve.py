@@ -1,0 +1,497 @@
+"""The hardened serving layer: batch-axis solves, queue semantics,
+deadlines, NaN quarantine, retries, circuit breaker, fault injections.
+
+The headline acceptance test (`test_mixed_batch_zero_lost_requests`)
+drives a batch containing healthy, NaN-diverging, and deadline-expired
+requests through the full server and asserts every healthy sample
+completes, every degraded one fails with a pointed typed error, and no
+request is lost.
+
+Worker-kill (os._exit) lives in a real subprocess at the bottom —
+in-process threads cannot survive it by definition.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import telemetry
+from repro.core import fd3d, init_parallel_stencil, iterate
+from repro.distributed import fault
+from repro.ir import Reduction
+from repro.serve import (BudgetExhausted, DeadlineExceeded, QueueFull,
+                         RequestQueue, SampleQuarantined, ServePolicy,
+                         ServerClosed, SimulationServer, SolveRequest)
+from repro.serve.engine import BatchEngine
+
+
+def run_proc(code: str, env_extra: dict | None = None,
+             timeout: int = 560) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop(fault.PLAN_ENV, None)
+    env.pop("REPRO_TELEMETRY", None)
+    if env_extra:
+        env.update(env_extra)
+    return subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=timeout, env=env)
+
+
+@pytest.fixture()
+def active_plan(monkeypatch):
+    def install(plan: fault.FaultPlan):
+        monkeypatch.setenv(fault.PLAN_ENV, plan.to_env())
+        fault.FaultPlan.reset_active()
+        return fault.FaultPlan.active()
+    yield install
+    fault.FaultPlan.reset_active()
+
+
+@pytest.fixture()
+def collector():
+    col = telemetry.configure(path=None)
+    yield col
+    telemetry.reset()
+
+
+def diffusion_kernel(backend="jnp"):
+    ps = init_parallel_stencil(backend=backend, ndims=3)
+
+    @ps.parallel(outputs=("T2",), rotations={"T2": "T"},
+                 reductions={"err": "max_abs_diff(T2, T)"})
+    def kern(T2, T, dt):
+        return {"T2": fd3d.inn(T) + dt * (fd3d.d2_xi(T) + fd3d.d2_yi(T)
+                                          + fd3d.d2_zi(T))}
+
+    return kern
+
+
+def spike(n=12, amp=1.0):
+    T = np.zeros((n, n, n), np.float32)
+    T[n // 2, n // 2, n // 2] = amp
+    return T
+
+
+def req(n=12, amp=1.0, dt=0.08, tol=1e-5, max_iters=600, **kw):
+    return SolveRequest(fields={"T": spike(n, amp), "T2": spike(n, amp)},
+                        scalars={"dt": dt}, tol=tol, max_iters=max_iters,
+                        **kw)
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: finite / nan_count reduction kinds as primitives
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_finite_and_nan_count_reductions(backend):
+    ps = init_parallel_stencil(backend=backend, ndims=3)
+
+    @ps.parallel(outputs=("T2",),
+                 reductions={"bad": "finite(T2)", "nbad": "nan_count(T2)"})
+    def step(T2, T):
+        return {"T2": fd3d.inn(T) * 2.0}
+
+    n = 8
+    clean = np.ones((n, n, n), np.float32)
+    _, reds = step(T2=clean.copy(), T=clean)
+    assert float(reds["bad"]) == 0.0
+    assert float(reds["nbad"]) == 0.0
+
+    poisoned = clean.copy()
+    poisoned[4, 4, 4] = np.nan
+    poisoned[2, 2, 2] = np.inf
+    _, reds = step(T2=clean.copy(), T=poisoned)
+    assert float(reds["bad"]) == 1.0
+    assert float(reds["nbad"]) == 2.0
+    # the folded indicator itself is NaN-free (safe for while_loop)
+    assert np.isfinite(float(reds["bad"]))
+
+
+def test_finite_reduction_ir_trace_and_cost():
+    ps = init_parallel_stencil(backend="jnp", ndims=3)
+
+    @ps.parallel(outputs=("T2",), reductions={"bad": "finite(T2)"})
+    def step(T2, T):
+        return {"T2": fd3d.inn(T)}
+
+    n = 8
+    T = np.ones((n, n, n), np.float32)
+    ir = step.stencil_ir(T2=T.copy(), T=T)
+    assert "bad" in ir.red_exprs
+    cost = step.cost_model(T2=T.copy(), T=T)
+    # the indicator map is priced into the fused check epilogue
+    assert cost.check_flops.total() > 0 and cost.n_reductions == 1
+
+    with pytest.raises(ValueError, match="one operand"):
+        Reduction("finite", "a", "b")
+    with pytest.raises(ValueError, match="one of"):
+        Reduction("bogus_kind", "a")
+
+
+# ---------------------------------------------------------------------------
+# tentpole core: the batch-axis solver
+# ---------------------------------------------------------------------------
+def test_solve_batch_matches_solo_bitwise():
+    kern = diffusion_kernel()
+    B, n = 4, 12
+    dts = np.array([0.08, 0.10, 0.12, 0.09], np.float32)
+    amps = np.array([1.0, 2.0, 0.5, 1.5], np.float32)
+    T0 = np.stack([spike(n, a) for a in amps])
+    solo = [iterate.solve_until(kern, {"T": T0[b], "T2": T0[b]},
+                                {"dt": float(dts[b])}, tol=1e-5,
+                                max_iters=500, check_every=4)
+            for b in range(B)]
+    res = iterate.solve_batch(kern, {"T": T0, "T2": T0}, {"dt": dts},
+                              tol=1e-5, max_iters=500, check_every=4)
+    assert bool(res.converged.all()) and not bool(res.bad.any())
+    for b in range(B):
+        # same backend, same per-step math, frozen after convergence:
+        # the batched sample IS the solo solve bitwise
+        np.testing.assert_array_equal(np.asarray(res.fields["T"][b]),
+                                      np.asarray(solo[b].fields["T"]))
+        assert int(res.iters[b]) == int(solo[b].iters)
+        assert float(res.err[b]) == float(solo[b].err)
+
+
+def test_solve_batch_quarantines_nan_and_respects_budget():
+    kern = diffusion_kernel()
+    n = 12
+    # sample 1: dt far above the CFL limit -> divergence -> NaN
+    dts = np.array([0.08, 5.0, 0.10], np.float32)
+    T0 = np.stack([spike(n) for _ in range(3)])
+    res = iterate.solve_batch(kern, {"T": T0, "T2": T0}, {"dt": dts},
+                              tol=1e-5,
+                              max_iters=np.array([500, 500, 8]),
+                              check_every=4)
+    assert bool(res.converged[0]) and not bool(res.bad[0])
+    assert bool(res.bad[1]) and not bool(res.converged[1])
+    assert bool(res.expired[2]) and int(res.iters[2]) == 8
+    # the poisoned neighbor did not contaminate the healthy sample
+    solo = iterate.solve_until(kern, {"T": T0[0], "T2": T0[0]},
+                               {"dt": 0.08}, tol=1e-5, max_iters=500,
+                               check_every=4)
+    np.testing.assert_array_equal(np.asarray(res.fields["T"][0]),
+                                  np.asarray(solo.fields["T"]))
+
+
+def test_solve_batch_pallas_kernel_routes_through_jnp_twin():
+    kern = diffusion_kernel("pallas")
+    ref = diffusion_kernel("jnp")
+    n = 12
+    T0 = np.stack([spike(n), spike(n, 2.0)])
+    dts = np.array([0.08, 0.10], np.float32)
+    rp = iterate.solve_batch(kern, {"T": T0, "T2": T0}, {"dt": dts},
+                             tol=1e-5, max_iters=400, check_every=4)
+    rj = iterate.solve_batch(ref, {"T": T0, "T2": T0}, {"dt": dts},
+                             tol=1e-5, max_iters=400, check_every=4)
+    assert bool(rp.converged.all())
+    for b in range(2):
+        np.testing.assert_array_equal(np.asarray(rp.fields["T"][b]),
+                                      np.asarray(rj.fields["T"][b]))
+
+
+def test_solve_batch_requires_reductions_and_rotations():
+    ps = init_parallel_stencil(backend="jnp", ndims=3)
+
+    @ps.parallel(outputs=("T2",))
+    def no_reds(T2, T):
+        return {"T2": fd3d.inn(T)}
+
+    T0 = np.stack([spike(), spike()])
+    with pytest.raises(ValueError, match="fused reductions"):
+        iterate.solve_batch(no_reds, {"T": T0, "T2": T0}, tol=1e-5,
+                            max_iters=10)
+
+
+def test_guard_name_reserved():
+    ps = init_parallel_stencil(backend="jnp", ndims=3)
+
+    @ps.parallel(outputs=("T2",), rotations={"T2": "T"},
+                 reductions={iterate.GUARD_NAME: "max_abs(T2)"})
+    def kern(T2, T):
+        return {"T2": fd3d.inn(T)}
+
+    T0 = np.stack([spike()])
+    with pytest.raises(ValueError, match="reserved"):
+        iterate.solve_batch(kern, {"T": T0, "T2": T0}, tol=1e-5,
+                            max_iters=10, error=iterate.GUARD_NAME)
+
+
+# ---------------------------------------------------------------------------
+# queue: backpressure, shed, deadlines, requeue
+# ---------------------------------------------------------------------------
+def test_queue_sheds_at_capacity_with_typed_error(collector):
+    q = RequestQueue(capacity=2)
+    q.submit(req())
+    q.submit(req())
+    with pytest.raises(QueueFull) as ei:
+        q.submit(req())
+    assert ei.value.capacity == 2
+    assert ei.value.reason == "queue_full"
+    assert collector.counters[("serve.admitted", ())] == 2
+    assert collector.counters[("serve.shed", ())] == 1
+
+
+def test_queue_rejects_after_close_and_fails_on_drop(collector):
+    q = RequestQueue(capacity=4)
+    t = q.submit(req())
+    q.close(drain=False)
+    with pytest.raises(ServerClosed):
+        q.submit(req())
+    with pytest.raises(ServerClosed):
+        t.result(timeout=1.0)
+
+
+def test_queue_expires_stale_requests_at_dispatch(collector):
+    q = RequestQueue(capacity=4)
+    t1 = q.submit(req(deadline_s=0.001))
+    t2 = q.submit(req())
+    time.sleep(0.01)
+    batch = q.take_batch(4, timeout=0.1)
+    assert [t is t2 for t in batch] == [True]
+    with pytest.raises(DeadlineExceeded) as ei:
+        t1.result(timeout=1.0)
+    assert ei.value.where == "queued"
+
+
+def test_queue_buckets_by_grid_and_scalar_names():
+    q = RequestQueue(capacity=8)
+    a1 = q.submit(req(n=12))
+    a2 = q.submit(req(n=12))
+    b1 = q.submit(req(n=16))
+    batch = q.take_batch(8, timeout=0.1)
+    assert set(id(t) for t in batch) == {id(a1), id(a2)}
+    batch2 = q.take_batch(8, timeout=0.1)
+    assert [id(t) for t in batch2] == [id(b1)]
+
+
+def test_requeue_goes_to_front():
+    q = RequestQueue(capacity=8)
+    t1 = q.submit(req())
+    t2 = q.submit(req())
+    got = q.take_batch(2, timeout=0.1)
+    assert got == [t1, t2]
+    t3 = q.submit(req())
+    q.requeue([t1, t2])
+    got2 = q.take_batch(3, timeout=0.1)
+    assert got2 == [t1, t2, t3]
+
+
+def test_fault_plan_reject_after_sheds(collector, active_plan):
+    active_plan(fault.FaultPlan(reject_after=2))
+    q = RequestQueue(capacity=100)
+    q.submit(req())
+    q.submit(req())
+    with pytest.raises(QueueFull):
+        q.submit(req())
+
+
+# ---------------------------------------------------------------------------
+# the server: end-to-end robustness
+# ---------------------------------------------------------------------------
+POLICY = ServePolicy(max_batch=4, chunk_steps=16, check_every=4,
+                     collect_window_s=0.01, queue_capacity=64)
+
+
+def test_server_solves_and_matches_direct(collector):
+    kern = diffusion_kernel()
+    direct = iterate.solve_until(kern, {"T": spike(), "T2": spike()},
+                                 {"dt": 0.08}, tol=1e-5, max_iters=600,
+                                 check_every=4)
+    with SimulationServer(kern, POLICY) as server:
+        out = server.solve(req(dt=0.08), timeout=120.0)
+    assert out["iters"] == int(direct.iters)
+    np.testing.assert_array_equal(out["fields"]["T"],
+                                  np.asarray(direct.fields["T"]))
+
+
+def test_mixed_batch_zero_lost_requests(collector):
+    """ACCEPTANCE: healthy + NaN-diverging + deadline-expired requests in
+    one serving run — healthy complete, degraded fail with pointed typed
+    errors, zero requests lost."""
+    kern = diffusion_kernel()
+    with SimulationServer(kern, POLICY) as server:
+        healthy = [server.submit(req(amp=1.0 + 0.3 * i,
+                                     dt=0.08 + 0.005 * (i % 3)))
+                   for i in range(6)]
+        nan_req = server.submit(req(dt=5.0))                 # diverges
+        late_req = server.submit(req(tol=1e-12, max_iters=10**6,
+                                     deadline_s=0.03))       # hopeless
+        budget_req = server.submit(req(tol=1e-12, max_iters=8))
+
+        outcomes = {}
+        for t in healthy:
+            out = t.result(timeout=120.0)
+            assert out["iters"] > 0 and np.isfinite(out["err"])
+            assert np.isfinite(out["fields"]["T"]).all()
+            outcomes[t.request.request_id] = "ok"
+        with pytest.raises(SampleQuarantined) as qi:
+            nan_req.result(timeout=120.0)
+        assert qi.value.step > 0
+        assert "NaN/Inf guard" in str(qi.value)
+        with pytest.raises(DeadlineExceeded) as di:
+            late_req.result(timeout=120.0)
+        assert di.value.where in ("queued", "in_batch")
+        with pytest.raises(BudgetExhausted) as bi:
+            budget_req.result(timeout=120.0)
+        assert bi.value.iters >= 8
+
+    c = collector.counters
+    assert c[("serve.admitted", ())] == 9
+    resolved = (c.get(("serve.completed", ()), 0)
+                + c.get(("serve.quarantined", ()), 0)
+                + c.get(("serve.budget_exhausted", ()), 0)
+                + sum(v for (n, _), v in c.items() if n == "serve.expired"))
+    assert resolved == 9, f"lost requests: {dict(c)}"
+    spans = [r for r in collector.records
+             if r["kind"] == "span" and r["name"] == "serve.request"]
+    assert len(spans) == 9       # per-request latency recorded
+
+
+def test_nan_at_step_fault_injection_quarantines(collector, active_plan):
+    active_plan(fault.FaultPlan(nan_at_step=8, nan_sample=0))
+    kern = diffusion_kernel()
+    with SimulationServer(kern, POLICY) as server:
+        t0 = server.submit(req(dt=0.08))
+        t1 = server.submit(req(dt=0.09))
+        # slot 0 is poisoned by the plan at the first chunk boundary
+        # past step 8; the DEVICE-side guard must catch it
+        with pytest.raises(SampleQuarantined):
+            t0.result(timeout=120.0)
+        out = t1.result(timeout=120.0)
+        assert np.isfinite(out["fields"]["T"]).all()
+    ev = [r for r in collector.records if r["kind"] == "event"
+          and r["name"] == "serve.fault_injected"]
+    assert len(ev) == 1 and ev[0]["attrs"]["kind"] == "nan"
+
+
+def test_transient_batch_failures_are_retried(collector, active_plan):
+    active_plan(fault.FaultPlan(batch_errors=2))
+    kern = diffusion_kernel()
+    pol = ServePolicy(max_batch=2, chunk_steps=16, check_every=4,
+                      retry_attempts=3, retry_backoff_s=0.001)
+    with SimulationServer(kern, pol) as server:
+        out = server.solve(req(dt=0.08), timeout=120.0)
+    assert out["iters"] > 0
+    assert collector.counters[("serve.batch_retries", ())] == 2
+
+
+def test_breaker_trips_and_supervisor_restarts_worker(collector,
+                                                      active_plan):
+    # 7 transient failures vs 2 attempts/batch: each batch exhausts its
+    # retries (strike), breaker threshold 2 trips the worker, the
+    # supervisor restarts one, and the request STILL completes
+    active_plan(fault.FaultPlan(batch_errors=7))
+    kern = diffusion_kernel()
+    pol = ServePolicy(max_batch=2, chunk_steps=16, check_every=4,
+                      retry_attempts=2, retry_backoff_s=0.001,
+                      breaker_threshold=2, max_worker_restarts=2)
+    with SimulationServer(kern, pol) as server:
+        out = server.solve(req(dt=0.08), timeout=120.0)
+    assert out["iters"] > 0
+    assert collector.counters[("serve.worker_restarts", ())] >= 1
+    trips = [r for r in collector.records if r["kind"] == "event"
+             and r["name"] == "serve.breaker_tripped"]
+    assert trips, "breaker never tripped"
+    assert collector.counters[("serve.requeued", ())] >= 1
+
+
+def test_batch_timeout_fails_stragglers_pointedly(collector):
+    kern = diffusion_kernel()
+    pol = ServePolicy(max_batch=2, chunk_steps=8, check_every=4,
+                      batch_timeout_s=0.05)
+    with SimulationServer(kern, pol) as server:
+        t = server.submit(req(tol=1e-13, max_iters=10**7))
+        with pytest.raises(DeadlineExceeded) as ei:
+            t.result(timeout=120.0)
+    assert ei.value.where == "batch_timeout"
+
+
+def test_continuous_refill_joins_mid_batch(collector):
+    kern = diffusion_kernel()
+    pol = ServePolicy(max_batch=2, chunk_steps=8, check_every=4,
+                      collect_window_s=0.01)
+    with SimulationServer(kern, pol) as server:
+        tickets = [server.submit(req(amp=1.0 + 0.2 * i)) for i in range(6)]
+        for t in tickets:
+            out = t.result(timeout=120.0)
+            assert out["iters"] > 0
+    # 6 requests through 2 slots: at least 4 joined via refill or later
+    # batches; refill must have fired at least once
+    c = collector.counters
+    assert (c.get(("serve.refilled", ()), 0)
+            + c.get(("serve.batches", ()), 0)) >= 3
+
+
+def test_engine_partial_batch_dead_slots_frozen(collector):
+    kern = diffusion_kernel()
+    pol = ServePolicy(max_batch=4, chunk_steps=16, check_every=4)
+    eng = BatchEngine(kern, pol)
+    q = RequestQueue(8)
+    t = q.submit(req(dt=0.08))
+    state = eng.start([t])
+    assert state.n_live == 1
+    dead_before = np.asarray(state.carry.fields["T"][2]).copy()
+    while state.n_live:
+        eng.run_chunk(state)
+        eng.harvest(state)
+    out = t.result(timeout=1.0)
+    assert out["iters"] > 0
+    np.testing.assert_array_equal(np.asarray(state.carry.fields["T"][2]),
+                                  dead_before)
+
+
+# ---------------------------------------------------------------------------
+# worker kill: a real process death (subprocess; supervisor recovers)
+# ---------------------------------------------------------------------------
+KILL_WORKER_CODE = r"""
+import json, numpy as np
+from repro import telemetry
+from repro.core import fd3d, init_parallel_stencil
+from repro.serve import ServePolicy, SimulationServer, SolveRequest
+
+col = telemetry.configure(path=None)
+ps = init_parallel_stencil(backend="jnp", ndims=3)
+
+@ps.parallel(outputs=("T2",), rotations={"T2": "T"},
+             reductions={"err": "max_abs_diff(T2, T)"})
+def kern(T2, T, dt):
+    return {"T2": fd3d.inn(T) + dt * (fd3d.d2_xi(T) + fd3d.d2_yi(T)
+                                      + fd3d.d2_zi(T))}
+
+def spike(n=12):
+    T = np.zeros((n, n, n), np.float32); T[6, 6, 6] = 1.0
+    return T
+
+pol = ServePolicy(max_batch=2, chunk_steps=16, check_every=4)
+with SimulationServer(kern, pol) as server:
+    ts = [server.submit(SolveRequest(
+        fields={"T": spike(), "T2": spike()}, scalars={"dt": 0.08},
+        tol=1e-5, max_iters=600)) for _ in range(3)]
+    outs = [t.result(timeout=120.0) for t in ts]
+print(json.dumps({"iters": [o["iters"] for o in outs]}))
+"""
+
+
+@pytest.mark.distributed
+def test_worker_kill_injection_dies_with_plan_exit_code():
+    # sanity arm: with the plan armed the process dies at the scheduled
+    # batch with the planned exit code (the injection is real)
+    plan = fault.FaultPlan(kill_worker_after=1)
+    r = run_proc(KILL_WORKER_CODE,
+                 env_extra={fault.PLAN_ENV: plan.to_env()})
+    assert r.returncode == fault.KILL_EXIT_CODE, r.stderr
+
+
+@pytest.mark.distributed
+def test_worker_kill_clean_run_completes():
+    r = run_proc(KILL_WORKER_CODE)
+    assert r.returncode == 0, r.stderr
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert all(i > 0 for i in out["iters"])

@@ -436,3 +436,100 @@ def test_telemetry_overhead_under_2pct(rng):
         if last < 0.02:
             break
     assert last < 0.02, f"telemetry overhead {last:.3%} >= 2%"
+
+
+# ---------------------------------------------------------------------------
+# hardened JSONL writer: transient I/O degrades to dropped-records-with-
+# counter instead of killing the solve (serving-layer satellite)
+# ---------------------------------------------------------------------------
+class _FlakyIO:
+    """Install/remove a FaultPlan object directly (bypassing the env) so
+    the injection budget starts ticking exactly where the test says."""
+
+    def __enter__(self):
+        fault.FaultPlan.reset_active()
+        return self
+
+    def arm(self, **kw):
+        plan = fault.FaultPlan(**kw)
+        fault._active_plan, fault._active_loaded = plan, True
+        return plan
+
+    def __exit__(self, *exc):
+        fault.FaultPlan.reset_active()
+        return False
+
+
+def test_writer_absorbs_transient_io_within_retry_budget(tmp_path,
+                                                          monkeypatch):
+    monkeypatch.setenv(fault.PLAN_ENV, fault.FaultPlan(io_errors=2).to_env())
+    fault.FaultPlan.reset_active()
+    path = str(tmp_path / "t.jsonl")
+    col = telemetry.configure(path=path)
+    for i in range(5):
+        col.count("solve.steps", i)
+    col.close()
+    fault.FaultPlan.reset_active()
+    lines = [json.loads(ln) for ln in open(path)]
+    assert col.dropped_records == 0
+    assert len(lines) == 6          # meta + 5 counters: nothing lost
+
+
+def test_writer_drops_with_counter_when_retries_exhausted(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    with _FlakyIO() as flaky:
+        col = telemetry.configure(path=path)
+        # budget > attempts: the next write fails all its retries
+        flaky.arm(io_errors=col.IO_ATTEMPTS)
+        col.count("lost_line", 1)       # dropped, MUST NOT raise
+        col.count("landed_line", 1)     # budget spent: lands
+        col.close()
+    lines = [json.loads(ln) for ln in open(path)]
+    mine = {"lost_line", "landed_line"}
+    names = [ln.get("name") for ln in lines
+             if ln["kind"] == "counter" and ln.get("name") in mine]
+    assert col.dropped_records == 1
+    assert names == ["landed_line"]
+    # the in-memory view is complete regardless of sink health
+    mem = [r.get("name") for r in col.records
+           if r["kind"] == "counter" and r.get("name") in mine]
+    assert mem == ["lost_line", "landed_line"]
+    telemetry.reset()
+
+
+def test_writer_degrades_to_memory_only_when_open_never_succeeds(
+        tmp_path, monkeypatch):
+    monkeypatch.setenv(fault.PLAN_ENV,
+                       fault.FaultPlan(io_errors=50).to_env())
+    fault.FaultPlan.reset_active()
+    path = str(tmp_path / "never.jsonl")
+    col = telemetry.configure(path=path)     # open exhausts retries
+    col.count("a", 1)
+    col.close()
+    fault.FaultPlan.reset_active()
+    assert not os.path.exists(path)
+    assert col.records[0].get("sink_degraded") is True
+    assert col.dropped_records == 2          # meta + counter
+    assert [r["kind"] for r in col.records] == ["meta", "counter"]
+
+
+def test_solve_survives_flaky_telemetry_sink(tmp_path):
+    """The integration cut: a solve with telemetry on a flaky sink must
+    complete normally — degraded observability, untouched results."""
+    kern = diffusion_kernel()
+    rng = np.random.RandomState(7)
+    T, Ci, sc = setup3d(rng)
+    clean = iterate.solve_until(kern, {"T": T, "T2": T, "Ci": Ci}, sc,
+                                tol=1e-4, max_iters=200, check_every=4)
+    path = str(tmp_path / "flaky.jsonl")
+    with _FlakyIO() as flaky:
+        col = telemetry.configure(path=path)
+        flaky.arm(io_errors=3 * col.IO_ATTEMPTS)
+        res = iterate.solve_until(kern, {"T": T, "T2": T, "Ci": Ci}, sc,
+                                  tol=1e-4, max_iters=200, check_every=4,
+                                  telemetry=col)
+        col.close()
+    np.testing.assert_array_equal(np.asarray(res.fields["T"]),
+                                  np.asarray(clean.fields["T"]))
+    assert col.dropped_records >= 1
+    telemetry.reset()
