@@ -38,9 +38,25 @@ import os
 import sys
 
 
+class BenchRecordError(Exception):
+    """A bench record could not be read — pointed notice, not a
+    traceback (a missing or torn record is an operator message, not a
+    crash)."""
+
+
 def load(path: str) -> dict:
-    with open(path) as f:
-        d = json.load(f)
+    try:
+        with open(path) as f:
+            d = json.load(f)
+    except OSError as e:
+        raise BenchRecordError(f"cannot read bench record {path!r}: "
+                               f"{e.strerror or e}") from None
+    except json.JSONDecodeError as e:
+        raise BenchRecordError(f"bench record {path!r} is not valid JSON "
+                               f"({e}) — torn write? delete or re-run the "
+                               "benchmark") from None
+    if not isinstance(d, dict):
+        raise BenchRecordError(f"bench record {path!r} is not a JSON object")
     d["_path"] = path
     return d
 
@@ -178,9 +194,15 @@ def scan_group(dirname: str, pattern: str, threshold: float) -> list[str]:
     shadow the rest of the group's trajectory the way a newest-RECORD
     scan would."""
     paths = sorted(glob.glob(os.path.join(dirname, pattern)))
-    recs = sorted((load(p) for p in paths), key=sort_stamp)
+    recs = []
+    for p in paths:
+        try:
+            recs.append(load(p))
+        except BenchRecordError as e:
+            print(f"# skip: {e}")
+    recs.sort(key=sort_stamp)
     if len(recs) < 2:
-        print(f"# {len(recs)} record(s) matching {pattern!r} in "
+        print(f"# {len(recs)} readable record(s) matching {pattern!r} in "
               f"{dirname!r}: nothing to compare")
         return []
     failures: list[str] = []
@@ -226,8 +248,12 @@ def main(argv=None) -> int:
     if args.files:
         if len(args.files) != 2:
             ap.error("pass exactly two files (OLD NEW) or none")
-        failures = compare(load(args.files[0]), load(args.files[1]),
-                           args.threshold)
+        try:
+            failures = compare(load(args.files[0]), load(args.files[1]),
+                               args.threshold)
+        except BenchRecordError as e:
+            print(f"# {e}")
+            return 2
     else:
         patterns = ((args.pattern,) if args.pattern is not None
                     else DEFAULT_PATTERNS)

@@ -124,6 +124,27 @@ def plan_factors(n_ranks: int, ndims: int = 1) -> tuple[int, ...]:
     return tuple(sorted(factors, reverse=True))
 
 
+def plan_compatible(shape: Sequence[int], radius: int, world: int,
+                    ndims: int = 1) -> tuple[int, tuple[int, ...]]:
+    """The supervisor's replan policy: the largest world size ``<= world``
+    whose :func:`plan_factors` decomposition passes
+    :func:`validate_stencil_factors` on this grid. After losing a rank, a
+    4-rank world on an interior-16 grid must step down to 2, not 3 — 3
+    does not divide. Returns ``(world, factors)``; raises a pointed error
+    when not even a single rank fits (grid thinner than the ghost ring)."""
+    for w in range(int(world), 0, -1):
+        factors = plan_factors(w, ndims)
+        try:
+            validate_stencil_factors(shape, factors, radius)
+        except ValueError:
+            continue
+        return w, factors
+    raise ValueError(
+        f"no world size in [1, {world}] decomposes grid {tuple(shape)} "
+        f"(radius {radius}) over {ndims} axis/axes — the grid interior is "
+        "thinner than one ghost ring")
+
+
 def validate_stencil_factors(shape: Sequence[int], factors: Sequence[int],
                              radius: int) -> None:
     """The ghost-ring decomposition contract: every decomposed axis'
@@ -172,6 +193,29 @@ def gather_fields(stacked: Mapping[str, np.ndarray],
 
 def _field_specs(factors: Sequence[int], axes: Sequence[str], ndim: int) -> P:
     return P(*axes, *([None] * (ndim - len(factors))))
+
+
+def fetch_global(stacked: Mapping[str, object], mesh: Mesh) -> dict:
+    """``device_get`` for a dict of sharded arrays that also works when
+    ``mesh`` spans OS processes. A process-spanning ``jax.Array`` cannot
+    be fetched directly (its shards live in other processes' address
+    spaces — ``jax.device_get`` raises); route those through a jitted
+    identity re-sharded to fully-replicated, then read the local copy.
+    Every participating process must call this (it runs a collective)."""
+    spanning = {k: v for k, v in stacked.items()
+                if isinstance(v, jax.Array) and not v.is_fully_addressable}
+    out: dict = {}
+    if spanning:
+        rep = NamedSharding(mesh, P())
+        replicated = jax.jit(
+            lambda t: t,
+            out_shardings={k: rep for k in spanning})(spanning)
+        for k, v in replicated.items():
+            out[k] = np.asarray(v.addressable_data(0))
+    for k, v in stacked.items():
+        if k not in out:
+            out[k] = jax.device_get(v)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -365,24 +409,27 @@ def elastic_solve_until(
                     mgr.wait()
                 raise fault.RankFailure(health["dead"])
         if mgr is not None:
-            global_now = gather_fields(
-                {k: jax.device_get(v) for k, v in stacked.items()},
-                factors, radius)
-            mgr.save(done, {"fields": global_now, "reds": reds, "err": err},
-                     blocking=ckpt.blocking,
-                     extra={"iters": done, "err": float(err),
-                            "tol": float(tol),
-                            "check_every": int(check_every),
-                            "save_every": save_every, "until": until,
-                            "factors": list(factors), "radius": int(radius),
-                            "converged": converged})
+            # the replicate-fetch is a collective: every process runs it,
+            # but only process 0 writes (one writer per shared ckpt dir)
+            global_now = gather_fields(fetch_global(stacked, mesh),
+                                       factors, radius)
+            if jax.process_index() == 0:
+                mgr.save(done,
+                         {"fields": global_now, "reds": reds, "err": err},
+                         blocking=ckpt.blocking,
+                         extra={"iters": done, "err": float(err),
+                                "tol": float(tol),
+                                "check_every": int(check_every),
+                                "save_every": save_every, "until": until,
+                                "factors": list(factors),
+                                "radius": int(radius),
+                                "converged": converged})
             saved.append(done)
         if plan is not None:
             plan.on_step(done)   # a kill lands between save and next chunk
     if mgr is not None:
         mgr.wait()
-    final = gather_fields({k: jax.device_get(v) for k, v in stacked.items()},
-                          factors, radius)
+    final = gather_fields(fetch_global(stacked, mesh), factors, radius)
     return SolveResult(
         fields={k: jnp.asarray(v) for k, v in final.items()},
         reds=reds, err=err, iters=jnp.int32(done),

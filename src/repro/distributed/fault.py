@@ -85,35 +85,71 @@ class Heartbeat:
     separate from :class:`StepMonitor` so a launcher can watch liveness
     without importing any timing state."""
 
-    def __init__(self, directory: str, rank: int = 0, timeout_s: float = 300.0):
+    def __init__(self, directory: str, rank: int = 0, timeout_s: float = 300.0,
+                 run_id: Optional[str] = None):
         self.dir = directory
         self.rank = rank
         self.timeout_s = timeout_s
+        self.run_id = run_id
         os.makedirs(directory, exist_ok=True)
 
+    def _prefix(self) -> str:
+        return f"{self.run_id}." if self.run_id else ""
+
     def path(self, rank: Optional[int] = None) -> str:
-        return os.path.join(self.dir, f"host_{self.rank if rank is None else rank}.json")
+        rank = self.rank if rank is None else rank
+        return os.path.join(self.dir, f"{self._prefix()}host_{rank}.json")
 
     def bump(self, step: int, ewma_s: float = 0.0) -> None:
         def write():
             FaultPlan.active_on_io(self.path())
             tmp = self.path() + ".tmp"
             with open(tmp, "w") as f:
-                json.dump({"step": step, "t": time.time(), "ewma_s": ewma_s}, f)
+                json.dump({"step": step, "t": time.time(), "ewma_s": ewma_s,
+                           "run_id": self.run_id}, f)
             os.replace(tmp, self.path())
         retry(write)
 
     def read_all(self) -> dict[int, dict]:
+        """Heartbeats of THIS run only: files are matched by the run-id
+        prefix, so liveness left behind by a previous (dead) world in the
+        same directory can never vouch for a rank in this one."""
         beats = {}
+        prefix = self._prefix() + "host_"
         for fn in os.listdir(self.dir):
-            if not (fn.startswith("host_") and fn.endswith(".json")):
+            if not (fn.startswith(prefix) and fn.endswith(".json")):
                 continue
             try:
                 with open(os.path.join(self.dir, fn)) as f:
-                    beats[int(fn[5:-5])] = json.load(f)
+                    beats[int(fn[len(prefix):-5])] = json.load(f)
             except (json.JSONDecodeError, ValueError, OSError):
                 continue  # torn write — treat as missing this round
         return beats
+
+    @staticmethod
+    def retire_stale(directory: str,
+                     keep_run_id: Optional[str] = None) -> list[str]:
+        """Delete heartbeat files in ``directory`` that do not belong to
+        ``keep_run_id`` (all of them when None). Launchers call this at
+        world startup so a fresh gang never reads a previous run's
+        liveness. Concurrent deletion is tolerated; returns the retired
+        file names."""
+        if not os.path.isdir(directory):
+            return []
+        keep_prefix = f"{keep_run_id}.host_" if keep_run_id else None
+        retired = []
+        for fn in os.listdir(directory):
+            if "host_" not in fn or not (fn.endswith(".json")
+                                         or fn.endswith(".json.tmp")):
+                continue
+            if keep_prefix is not None and fn.startswith(keep_prefix):
+                continue
+            try:
+                os.unlink(os.path.join(directory, fn))
+                retired.append(fn)
+            except OSError:
+                continue
+        return sorted(retired)
 
     def dead_ranks(self, expected: Optional[list[int]] = None,
                    now: Optional[float] = None) -> list[int]:
@@ -127,14 +163,15 @@ class Heartbeat:
 
 class StepMonitor:
     def __init__(self, host_id: int = 0, heartbeat_dir: Optional[str] = None,
-                 straggler_factor: float = 1.5, timeout_s: float = 300.0):
+                 straggler_factor: float = 1.5, timeout_s: float = 300.0,
+                 run_id: Optional[str] = None):
         self.host_id = host_id
         self.dir = heartbeat_dir
         self.factor = straggler_factor
         self.timeout_s = timeout_s
         self.stats = StepStats()
         self.heartbeat = (Heartbeat(heartbeat_dir, rank=host_id,
-                                    timeout_s=timeout_s)
+                                    timeout_s=timeout_s, run_id=run_id)
                           if heartbeat_dir else None)
 
     def record(self, step: int, dt: float) -> None:
@@ -250,6 +287,10 @@ class FaultPlan:
     the retry paths. ``kill_at_io`` dies mid-write: the N-th guarded
     I/O operation (1-based) ``os._exit``s the process INSIDE the write
     path — the window where a SIGKILL tears an in-flight checkpoint.
+    ``kill_at_rendezvous`` dies on entry to the N-th
+    ``jax.distributed`` rendezvous attempt (consumed by
+    :meth:`on_rendezvous` in the multihost launcher) — the mid-init
+    death that leaves peers waiting on the coordinator.
 
     Serving-path injections (consumed by ``repro.serve``):
     ``nan_at_step`` poisons sample ``nan_sample`` of every submitted
@@ -266,6 +307,7 @@ class FaultPlan:
     hang_at_step: Optional[int] = None
     hang_s: float = 5.0
     rank: int = 0                 # rank this plan applies to (default all == 0)
+    kill_at_rendezvous: Optional[int] = None  # die entering the N-th rendezvous attempt
     corrupt_checkpoint: Optional[int] = None
     io_errors: int = 0
     kill_at_io: Optional[int] = None
@@ -340,6 +382,17 @@ class FaultPlan:
             self._killed = True
             # a real preemption does not unwind the stack or flush
             # buffers; os._exit is the closest in-process equivalent
+            os._exit(KILL_EXIT_CODE)
+
+    def on_rendezvous(self, attempt: int, rank: int = 0) -> None:
+        """Called by the multihost launcher's :func:`initialize` on entry
+        to each rendezvous attempt (1-based). ``kill_at_rendezvous`` dies
+        there — a process that is SIGKILLed mid-``jax.distributed``
+        bring-up, leaving its peers to hit the initialization timeout."""
+        if rank != self.rank:
+            return
+        if (self.kill_at_rendezvous is not None
+                and attempt >= self.kill_at_rendezvous):
             os._exit(KILL_EXIT_CODE)
 
     def on_io(self, path: str = "") -> None:

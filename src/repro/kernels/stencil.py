@@ -67,6 +67,7 @@ from __future__ import annotations
 
 import functools
 import math
+import os
 from typing import Callable, Mapping, Sequence
 
 import jax
@@ -80,6 +81,45 @@ from ..ir.reductions import normalize_reductions as _normalize_reductions
 # VMEM per core; leave generous headroom for Pallas pipelining (double
 # buffering doubles the live window set) and spills.
 DEFAULT_VMEM_BUDGET = 8 << 20
+
+# Hard per-core VMEM capacity (v5e: 128 MiB) for the preflight admission
+# check. The soft budget above steers automatic tile derivation; THIS is
+# the wall an explicit tile must not cross — beyond it the backend fails
+# with an opaque allocation error long after tracing. Override per
+# deployment with REPRO_VMEM_LIMIT_BYTES.
+DEFAULT_VMEM_LIMIT = 128 << 20
+
+
+class LaunchFootprintError(ValueError):
+    """The derived launch's VMEM window footprint exceeds the device
+    limit — raised at derivation time (preflight), not as an opaque
+    backend allocation failure at compile/run time."""
+
+
+def _vmem_limit(vmem_limit: int | None) -> int:
+    if vmem_limit is not None:
+        return int(vmem_limit)
+    env = os.environ.get("REPRO_VMEM_LIMIT_BYTES", "")
+    return int(env) if env else DEFAULT_VMEM_LIMIT
+
+
+def preflight_vmem(block: Sequence[int], window_bytes: int,
+                   vmem_limit: int | None = None, *,
+                   explicit_tile: bool) -> None:
+    """Admission check: refuse a launch whose halo-extended window set
+    cannot fit device VMEM. Names the tile, the footprint and the limit,
+    and says what to do about it."""
+    limit = _vmem_limit(vmem_limit)
+    if window_bytes <= limit:
+        return
+    source = ("explicit tile" if explicit_tile
+              else "derived block (grid too small to shrink further)")
+    raise LaunchFootprintError(
+        f"launch preflight: {source} {tuple(block)} needs "
+        f"{window_bytes / 2**20:.1f} MiB of VMEM windows, over the device "
+        f"limit of {limit / 2**20:.1f} MiB — pass a smaller tile=, raise "
+        "march_axis streaming, or (if the device really has more VMEM) "
+        "set REPRO_VMEM_LIMIT_BYTES")
 
 
 def default_compute_dtype(dtype) -> jnp.dtype:
@@ -204,9 +244,17 @@ def derive_launch(
     halos: Sequence[tuple[int, int]] | None = None,
     march_axis: int | None = None,
     march_min_block: int = 1,
+    vmem_limit: int | None = None,
 ) -> tuple[tuple[int, ...], tuple[int, ...]]:
     """Derive (grid, block_shape) from array bounds — ParallelStencil's
     automatic launch-parameter derivation, with TPU tiling constraints.
+
+    Every derived launch passes a preflight admission check against the
+    hard device VMEM capacity (``vmem_limit``, default
+    :data:`DEFAULT_VMEM_LIMIT` or ``REPRO_VMEM_LIMIT_BYTES``): an
+    explicit ``tile`` whose halo-extended windows cannot fit raises a
+    pointed :class:`LaunchFootprintError` here, before compile, instead
+    of an opaque backend allocation failure later.
 
     The minor (last) axis prefers 128-lane multiples, the next-to-minor
     8-sublane multiples. Blocks must divide the array extents (the caller
@@ -252,6 +300,8 @@ def derive_launch(
         block = tuple(int(b) for b in tile)
         if len(block) != nd or any(s % b for s, b in zip(shape, block)):
             raise ValueError(f"tile {block} must divide shape {shape}")
+        preflight_vmem(block, window_bytes(block), vmem_limit,
+                       explicit_tile=True)
     else:
         caps = [256 if a == nd - 1 else (64 if a == nd - 2 else 16) for a in range(nd)]
         aligns = [128 if a == nd - 1 else (8 if a == nd - 2 else 1) for a in range(nd)]
@@ -281,6 +331,10 @@ def derive_launch(
             else:
                 break  # cannot shrink further; let it ride
         block = tuple(block)
+        # "let it ride" can still exceed the soft budget — but never the
+        # hard device capacity
+        preflight_vmem(block, window_bytes(block), vmem_limit,
+                       explicit_tile=False)
     grid = tuple(s // b for s, b in zip(shape, block))
     return grid, block
 

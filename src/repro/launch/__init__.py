@@ -1,1 +1,3 @@
-"""Launch layer: meshes, jit step builders, dry-run, train/serve drivers."""
+"""Launch layer: meshes, jit step builders, dry-run, train/serve
+drivers, and the multi-process gang launcher/supervisor
+(:mod:`repro.launch.multihost`)."""

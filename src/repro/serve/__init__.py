@@ -24,12 +24,14 @@ from .errors import (BudgetExhausted, DeadlineExceeded, QueueFull,
                      RequestRejected, SampleQuarantined, ServeError,
                      ServerClosed, WorkerDied)
 from .policy import ServePolicy
+from .pool import ProcessWorkerPool, ProcTicket
 from .queue import RequestQueue, SolveRequest, Ticket, bucket_key
 from .server import SimulationServer
 
 __all__ = [
     "SimulationServer", "ServePolicy", "SolveRequest", "Ticket",
     "RequestQueue", "bucket_key",
+    "ProcessWorkerPool", "ProcTicket",
     "ServeError", "RequestRejected", "QueueFull", "ServerClosed",
     "DeadlineExceeded", "SampleQuarantined", "BudgetExhausted",
     "WorkerDied",

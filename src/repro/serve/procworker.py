@@ -1,0 +1,189 @@
+"""One OS-process serving worker draining a filesystem spool.
+
+``python -m repro.serve.procworker --spool DIR [--kernel mod:factory]``
+
+The thread-based :class:`~repro.serve.worker.Worker` shares its process
+(and its failures) with the server; this worker is the multi-process
+analogue used by :class:`~repro.serve.pool.ProcessWorkerPool` — a child
+that can be SIGKILLed without taking the pool down. The wire protocol is
+files (the spool survives a dead worker by construction):
+
+  * ``pending/<seq>_<id>.npz`` — a request: field arrays plus a
+    ``__meta__`` JSON blob (scalars, tol, max_iters, check_every);
+  * claim = atomic ``os.rename`` into ``claimed/rank_<r>/`` (exactly one
+    winner per request, no locks);
+  * ``done/<name>.npz`` (result fields + ``__result__`` JSON) or
+    ``done/<name>.err.json`` (typed failure) — written via tmp+rename so
+    readers never see a torn file;
+  * a crashed worker leaves its claims in ``claimed/rank_<r>/``; the
+    pool's supervisor renames them back to ``pending/`` (the original
+    ``<seq>`` prefix keeps recovered requests at the FRONT of the
+    sorted-name order — recovery never reorders the unexpired backlog).
+
+Liveness: the worker bumps a run-id-namespaced
+:class:`~repro.distributed.fault.Heartbeat` every loop (idle included),
+so a stale heartbeat always means wedged, not idle.
+``FaultPlan.kill_worker_after`` dies after N completed requests — the
+injection the pool's recovery test drives.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import io
+import json
+import os
+import sys
+import time
+from typing import Optional
+
+import numpy as np
+
+from ..distributed import fault
+from ..launch.multihost import ENV_HEARTBEAT_DIR, ENV_PROCESS_ID, ENV_RUN_ID
+
+__all__ = ["demo_kernel", "write_request", "read_request",
+           "write_result", "read_result", "main"]
+
+CLOSED_MARKER = "CLOSED"
+
+
+# -- spool wire format -------------------------------------------------------
+def write_request(path: str, fields: dict, meta: dict) -> None:
+    """Atomically write one request/result npz (tmp + rename)."""
+    buf = io.BytesIO()
+    arrays = {f"field::{k}": np.asarray(v) for k, v in fields.items()}
+    arrays["__meta__"] = np.frombuffer(
+        json.dumps(meta).encode(), dtype=np.uint8)
+    np.savez(buf, **arrays)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(buf.getvalue())
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def read_request(path: str) -> tuple[dict, dict]:
+    with np.load(path) as z:
+        fields = {k[len("field::"):]: z[k] for k in z.files
+                  if k.startswith("field::")}
+        meta = json.loads(bytes(z["__meta__"]).decode())
+    return fields, meta
+
+
+write_result = write_request
+read_result = read_request
+
+
+def demo_kernel():
+    """The built-in kernel factory (3-D diffusion — same as the fault
+    tests), so the pool works out of the box and in CI."""
+    from ..core import fd3d, init_parallel_stencil
+
+    ps = init_parallel_stencil(backend="jnp", ndims=3)
+
+    @ps.parallel(outputs=("T2",), rotations={"T2": "T"},
+                 reductions={"err": "max_abs_diff(T2, T)"})
+    def kern(T2, T, dt):
+        return {"T2": fd3d.inn(T) + dt * (fd3d.d2_xi(T) + fd3d.d2_yi(T)
+                                          + fd3d.d2_zi(T))}
+
+    return kern
+
+
+def _resolve_kernel(spec: str):
+    mod, _, attr = spec.partition(":")
+    factory = getattr(importlib.import_module(mod), attr or "demo_kernel")
+    return factory()
+
+
+def _claim(pending: str, claimed: str) -> Optional[str]:
+    """Oldest unclaimed request, atomically moved into our claim dir
+    (rename races lose silently — another worker won)."""
+    for name in sorted(os.listdir(pending)):
+        if not name.endswith(".npz"):
+            continue
+        src, dst = os.path.join(pending, name), os.path.join(claimed, name)
+        try:
+            os.rename(src, dst)
+            return dst
+        except OSError:
+            continue
+    return None
+
+
+def serve_spool(spool: str, kernel, *, rank: int = 0,
+                run_id: Optional[str] = None,
+                heartbeat_dir: Optional[str] = None,
+                idle_sleep_s: float = 0.02) -> int:
+    """The worker loop: claim -> solve -> publish, until the pool drops
+    the ``CLOSED`` marker and the backlog drains."""
+    from ..core import iterate
+
+    pending = os.path.join(spool, "pending")
+    claimed = os.path.join(spool, "claimed", f"rank_{rank}")
+    done = os.path.join(spool, "done")
+    for d in (pending, claimed, done):
+        os.makedirs(d, exist_ok=True)
+    hb = (fault.Heartbeat(heartbeat_dir, rank=rank, run_id=run_id)
+          if heartbeat_dir else None)
+    plan = fault.FaultPlan.active()
+    served = 0
+    while True:
+        if hb is not None:
+            hb.bump(served)
+        path = _claim(pending, claimed)
+        if path is None:
+            if os.path.exists(os.path.join(spool, CLOSED_MARKER)):
+                return 0
+            time.sleep(idle_sleep_s)
+            continue
+        name = os.path.basename(path)
+        try:
+            fields, meta = read_request(path)
+            res = iterate.solve_until(
+                kernel, fields, meta.get("scalars") or {},
+                tol=float(meta.get("tol", 0.0)),
+                max_iters=int(meta.get("max_iters", 100)),
+                check_every=int(meta.get("check_every", 1)))
+            out = {k: np.asarray(v) for k, v in res.fields.items()}
+            write_result(os.path.join(done, name), out,
+                         {"iters": int(res.iters), "err": float(res.err),
+                          "rank": rank})
+        except Exception as e:  # typed failure file — the request is
+            # answered, never lost silently
+            err = {"error": type(e).__name__, "detail": str(e)[:500],
+                   "rank": rank}
+            tmp = os.path.join(done, name + ".err.json.tmp")
+            with open(tmp, "w") as f:
+                json.dump(err, f)
+            os.replace(tmp, os.path.join(done, name + ".err.json"))
+        finally:
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
+        served += 1
+        if hb is not None:
+            hb.bump(served)
+        if plan is not None:
+            plan.worker_batch_done()
+
+
+def main(argv: Optional[list[str]] = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.serve.procworker")
+    ap.add_argument("--spool", required=True)
+    ap.add_argument("--kernel", default="repro.serve.procworker:demo_kernel",
+                    help="kernel factory as module:callable")
+    ap.add_argument("--rank", type=int,
+                    default=int(os.environ.get(ENV_PROCESS_ID, 0)))
+    args = ap.parse_args(argv)
+    return serve_spool(
+        args.spool, _resolve_kernel(args.kernel), rank=args.rank,
+        run_id=os.environ.get(ENV_RUN_ID) or None,
+        heartbeat_dir=os.environ.get(ENV_HEARTBEAT_DIR) or None)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

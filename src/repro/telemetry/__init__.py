@@ -26,7 +26,7 @@ from .collector import NULL, Collector, NullCollector, SCHEMA_VERSION
 
 __all__ = [
     "Collector", "NullCollector", "NULL", "SCHEMA_VERSION",
-    "get", "enabled", "configure", "resolve", "reset",
+    "get", "enabled", "configure", "configure_rank", "resolve", "reset",
     "count", "gauge", "observe", "event", "span",
 ]
 
@@ -77,7 +77,8 @@ def enabled() -> bool:
 
 
 def configure(path: Optional[str] = None, *, enabled: bool = True,
-              meta: Optional[dict] = None) -> Union[Collector, NullCollector]:
+              meta: Optional[dict] = None,
+              rank: Optional[int] = None) -> Union[Collector, NullCollector]:
     """Install (or disable) the global collector programmatically,
     overriding the environment. Returns the new active collector."""
     global _ACTIVE
@@ -86,8 +87,31 @@ def configure(path: Optional[str] = None, *, enabled: bool = True,
     if not enabled:
         _ACTIVE = NULL
     else:
-        _ACTIVE = Collector(path, meta={**_run_meta(), **(meta or {})})
+        _ACTIVE = Collector(path, meta={**_run_meta(), **(meta or {})},
+                            rank=rank)
     return _ACTIVE
+
+
+def configure_rank(rank: int,
+                   path: Optional[str] = None) -> Union[Collector,
+                                                        NullCollector]:
+    """Per-rank stream for multi-process runs: when telemetry is enabled
+    via the environment (or an explicit ``path`` is given), re-point the
+    collector at ``rank_<rank>.jsonl`` beside the env-configured sink,
+    with every record rank-stamped — the layout
+    ``telemetry.report --merge 'rank_*.jsonl'`` interleaves. A no-op
+    returning :data:`NULL` when telemetry is off (workers can call this
+    unconditionally after rendezvous)."""
+    if path is None:
+        val = os.environ.get("REPRO_TELEMETRY", "")
+        if not _truthy(val):
+            return NULL
+        if "/" in val or val.endswith(".jsonl"):
+            d = os.path.dirname(val) or "."
+        else:
+            d = os.environ.get("REPRO_TELEMETRY_DIR", "telemetry")
+        path = os.path.join(d, f"rank_{rank}.jsonl")
+    return configure(path, meta={"rank": rank}, rank=rank)
 
 
 def reset():

@@ -166,8 +166,10 @@ class Collector:
     IO_BACKOFF_S = 0.01
     IO_MAX_BACKOFF_S = 0.1
 
-    def __init__(self, path: Optional[str] = None, *, meta: Optional[dict] = None):
+    def __init__(self, path: Optional[str] = None, *,
+                 meta: Optional[dict] = None, rank: Optional[int] = None):
         self.path = path
+        self.rank = rank       # stamps every record (multi-process streams)
         self.records: list[dict] = []
         self.counters: dict[tuple, float] = {}
         self.gauges: dict[tuple, float] = {}
@@ -200,6 +202,8 @@ class Collector:
 
     # -- emission ------------------------------------------------------------
     def _emit(self, rec: dict):
+        if self.rank is not None and "rank" not in rec:
+            rec["rank"] = self.rank
         with self._lock:
             self.records.append(rec)
             fh = self._fh

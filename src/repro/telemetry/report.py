@@ -1,6 +1,12 @@
 """``python -m repro.telemetry.report RUN.jsonl`` — render a run's event
 log into per-phase summary tables and (optionally) the Perfetto trace.
 
+Multi-process runs write one rank-stamped stream per process
+(``rank_0.jsonl``, ``rank_1.jsonl``, ... — see
+``telemetry.configure_rank``); ``--merge 'rank_*.jsonl'`` interleaves
+them by timestamp into one timeline and adds a per-rank phase table, so
+a straggling rank shows up as ITS span rows, not an averaged blur.
+
 Offline companion of the live exporters: everything here is a pure
 function over the JSONL records so ``benchmarks/report.py`` can reuse the
 same tables in EXPERIMENTS.md.
@@ -8,6 +14,7 @@ same tables in EXPERIMENTS.md.
 from __future__ import annotations
 
 import argparse
+import glob as _glob
 import sys
 
 import numpy as np
@@ -15,7 +22,8 @@ import numpy as np
 from . import export, schema
 
 __all__ = ["phase_summary", "counter_totals", "last_gauges",
-           "error_trajectory", "format_table", "main"]
+           "error_trajectory", "format_table", "merge_records",
+           "per_rank_phase_summary", "main"]
 
 
 def phase_summary(records) -> list[dict]:
@@ -68,6 +76,53 @@ def error_trajectory(records) -> list[dict]:
     return out
 
 
+def _stream_rank(path: str, records) -> object:
+    """The rank a stream belongs to: record stamps win, then the meta
+    head, then a ``rank_<i>`` filename; '?' when untagged."""
+    for r in records:
+        if "rank" in r:
+            return r["rank"]
+    import re
+    m = re.search(r"rank_(\d+)", path)
+    return int(m.group(1)) if m else "?"
+
+
+def merge_records(paths: list[str]) -> list[dict]:
+    """Interleave several per-rank JSONL streams into one timestamp-
+    ordered record list. Every record carries a ``rank`` key afterwards
+    (stamped from the stream when its own records were not). The sort is
+    stable, so same-timestamp records keep per-stream order."""
+    merged: list[dict] = []
+    for path in paths:
+        records = schema.load_records(path)
+        rank = _stream_rank(path, records)
+        for r in records:
+            if "rank" not in r:
+                r = dict(r, rank=rank)
+            merged.append(r)
+    merged.sort(key=lambda r: float(r.get("ts", 0.0)))
+    return merged
+
+
+def per_rank_phase_summary(records) -> list[dict]:
+    """Span aggregates split by rank — rows ordered (phase, rank) so one
+    rank's outlier durations sit next to its peers'."""
+    by_key: dict[tuple, list[float]] = {}
+    for r in records:
+        if r.get("kind") == "span":
+            by_key.setdefault((r["name"], r.get("rank", "?")),
+                              []).append(float(r["dur_s"]))
+    rows = []
+    for (name, rank) in sorted(by_key, key=str):
+        d = by_key[(name, rank)]
+        rows.append({"phase": name, "rank": rank, "count": len(d),
+                     "total_s": float(sum(d)),
+                     "mean_s": float(np.mean(d)),
+                     "p90_s": float(np.percentile(d, 90)),
+                     "max_s": float(max(d))})
+    return rows
+
+
 def format_table(rows: list[dict], cols: list[str],
                  title: str | None = None) -> str:
     """Plain fixed-width text table (markdown-pipe style)."""
@@ -94,21 +149,32 @@ def format_table(rows: list[dict], cols: list[str],
     return "\n".join(lines)
 
 
-def render(records, out=None):
+def render(records, out=None, per_rank: bool = False):
     out = out if out is not None else sys.stdout
     meta = next((r for r in records if r.get("kind") == "meta"), {})
-    print(f"# telemetry report (schema {meta.get('schema', '?')}, "
-          f"pid {meta.get('pid', '?')}, backend {meta.get('backend', '?')})",
-          file=out)
-    for title, rows, cols in (
+    ranks = sorted({r["rank"] for r in records if "rank" in r}, key=str)
+    head = (f"# telemetry report (schema {meta.get('schema', '?')}, "
+            f"pid {meta.get('pid', '?')}, backend {meta.get('backend', '?')}")
+    if per_rank and ranks:
+        head += f", ranks {ranks}"
+    print(head + ")", file=out)
+    tables = [
         ("Per-phase spans", phase_summary(records),
          ["phase", "count", "total_s", "mean_s", "p50_s", "p90_s", "max_s"]),
+    ]
+    if per_rank:
+        tables.append(
+            ("Per-rank phases", per_rank_phase_summary(records),
+             ["phase", "rank", "count", "total_s", "mean_s", "p90_s",
+              "max_s"]))
+    tables += [
         ("Counters", counter_totals(records), ["counter", "labels", "total"]),
         ("Gauges (last value)", last_gauges(records),
          ["gauge", "labels", "value"]),
         ("Error trajectory", error_trajectory(records),
          ["iters", "err", "per_step_s"]),
-    ):
+    ]
+    for title, rows, cols in tables:
         t = format_table(rows, cols, title)
         if t:
             print("\n" + t, file=out)
@@ -118,16 +184,30 @@ def main(argv=None) -> int:
     p = argparse.ArgumentParser(
         prog="python -m repro.telemetry.report",
         description="Summarize a telemetry JSONL run log.")
-    p.add_argument("log", help="telemetry JSONL file")
+    p.add_argument("log", nargs="*", help="telemetry JSONL file(s)")
+    p.add_argument("--merge", metavar="GLOB", action="append", default=[],
+                   help="interleave per-rank streams matching this glob "
+                        "(e.g. 'rank_*.jsonl') by timestamp; adds a "
+                        "per-rank phase table")
     p.add_argument("--trace", metavar="OUT.json", default=None,
                    help="also write the Chrome/Perfetto trace here")
     p.add_argument("--validate", action="store_true",
                    help="schema-validate the log first (exit 1 on drift)")
     args = p.parse_args(argv)
+    paths = list(args.log)
+    for pattern in args.merge:
+        hits = sorted(_glob.glob(pattern))
+        if not hits:
+            print(f"# no files match {pattern!r}", file=sys.stderr)
+        paths += hits
+    if not paths:
+        p.error("pass a JSONL file or --merge GLOB")
     if args.validate:
-        schema.validate_file(args.log)
-    records = schema.load_records(args.log)
-    render(records)
+        for path in paths:
+            schema.validate_file(path)
+    merged = bool(args.merge) or len(paths) > 1
+    records = merge_records(paths) if merged else schema.load_records(paths[0])
+    render(records, per_rank=merged)
     if args.trace:
         n = export.write_chrome_trace(records, args.trace)
         print(f"\nwrote {n} trace events -> {args.trace}")

@@ -13,7 +13,10 @@ a float ``ts`` (unix seconds). Per kind:
              ``ts`` is the wall-clock start, ``dur_s >= 0`` the duration.
 ``event``    ``{kind, ts, name, attrs}`` — structured one-off record.
 
-``labels`` values must be JSON scalars; ``attrs`` any JSON value. The CI
+``labels`` values must be JSON scalars; ``attrs`` any JSON value.
+Multi-process streams additionally stamp every record with an integer
+``rank`` (see ``telemetry.configure_rank``) — validators treat it like
+any other extra key. The CI
 telemetry job runs ``python -m repro.telemetry.schema RUN.jsonl`` over
 every instrumented example run — an emitter drifting from this contract
 fails the build, not the dashboard.

@@ -1,0 +1,64 @@
+"""benchmarks/compare.py robustness: thin/missing/corrupt record sets
+must produce clean operator-facing notices (and a distinct exit code),
+never a traceback — a CI perf gate that crashes on its own inputs is
+worse than no gate."""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+import compare  # noqa: E402
+
+
+def _record(path, per_step_s, ts="2026-01-01T00:00:00"):
+    with open(path, "w") as f:
+        json.dump({"rows": [{"name": "diffusion3d", "n": 64, "nsteps": 10,
+                             "dtype": "float32",
+                             "per_step_s": per_step_s}],
+                   "meta": {"timestamp_utc": ts, "backend": "cpu",
+                            "hostname": "h", "jax_version": "0.4.37"}}, f)
+
+
+def test_scan_group_single_record_is_clean_notice(tmp_path, capsys):
+    _record(str(tmp_path / "BENCH_teff_a.json"), 1e-3)
+    failures = compare.scan_group(str(tmp_path), "BENCH_teff*.json", 0.15)
+    out = capsys.readouterr().out
+    assert failures == []
+    assert "1 readable record(s)" in out and "nothing to compare" in out
+
+
+def test_scan_group_skips_corrupt_records(tmp_path, capsys):
+    _record(str(tmp_path / "BENCH_teff_a.json"), 1e-3)
+    _record(str(tmp_path / "BENCH_teff_c.json"), 1.1e-3,
+            ts="2026-01-02T00:00:00")
+    with open(tmp_path / "BENCH_teff_b.json", "w") as f:
+        f.write("{torn")                       # torn write
+    with open(tmp_path / "BENCH_teff_d.json", "w") as f:
+        f.write("[1, 2]")                      # not an object
+    failures = compare.scan_group(str(tmp_path), "BENCH_teff*.json", 0.15)
+    out = capsys.readouterr().out
+    assert failures == []                      # the two good records compare
+    assert out.count("# skip:") == 2
+    assert "not valid JSON" in out and "not a JSON object" in out
+    assert "OK" in out
+
+
+def test_explicit_pair_missing_file_is_rc2_not_traceback(tmp_path, capsys):
+    good = str(tmp_path / "BENCH_teff_a.json")
+    _record(good, 1e-3)
+    rc = compare.main([good, str(tmp_path / "never_written.json")])
+    out = capsys.readouterr().out
+    assert rc == 2
+    assert "cannot read bench record" in out
+
+
+def test_explicit_pair_regression_still_detected(tmp_path, capsys):
+    old = str(tmp_path / "BENCH_teff_old.json")
+    new = str(tmp_path / "BENCH_teff_new.json")
+    _record(old, 1e-3)
+    _record(new, 2e-3, ts="2026-01-02T00:00:00")
+    assert compare.main([old, new]) == 1
+    assert "REGRESSION" in capsys.readouterr().out

@@ -7,7 +7,8 @@ import pytest
 
 from repro.core import Grid, FieldSet, fd2d, fd3d, init_parallel_stencil
 from repro.kernels import ref
-from repro.kernels.stencil import derive_launch
+from repro.kernels.stencil import (LaunchFootprintError, derive_launch,
+                                   preflight_vmem)
 
 
 def _diffusion_kernels(fd):
@@ -134,6 +135,44 @@ def test_derive_launch_vmem_budget_shrinks_blocks():
     assert window(b_small) <= small
     assert window(b_small) < window(b_big)
     assert all(s % b == 0 for s, b in zip(shape, b_small))
+
+
+def test_preflight_rejects_oversized_explicit_tile():
+    """An explicit tile whose halo-extended windows exceed device VMEM
+    must fail at derivation time with a pointed admission error, not as
+    an opaque backend allocation failure later."""
+    shape = (512, 512, 512)
+    with pytest.raises(LaunchFootprintError) as ei:
+        derive_launch(shape, 1, 3, 4, tile=(512, 512, 512))
+    msg = str(ei.value)
+    assert "explicit tile" in msg and "MiB" in msg
+    assert "REPRO_VMEM_LIMIT_BYTES" in msg
+    # the same footprint is admitted when the device really has the room
+    derive_launch(shape, 1, 3, 4, tile=(512, 512, 512),
+                  vmem_limit=4 << 30)
+    # LaunchFootprintError IS a ValueError: existing callers' handlers hold
+    assert issubclass(LaunchFootprintError, ValueError)
+
+
+def test_preflight_env_override(monkeypatch):
+    tile = (64, 64, 64)
+    window = 3 * int(np.prod([b + 2 for b in tile])) * 4
+    monkeypatch.setenv("REPRO_VMEM_LIMIT_BYTES", str(window - 1))
+    with pytest.raises(LaunchFootprintError):
+        derive_launch((64, 64, 64), 1, 3, 4, tile=tile)
+    monkeypatch.setenv("REPRO_VMEM_LIMIT_BYTES", str(window))
+    derive_launch((64, 64, 64), 1, 3, 4, tile=tile)
+    # explicit argument beats the env override
+    with pytest.raises(LaunchFootprintError):
+        preflight_vmem(tile, window, vmem_limit=window - 1,
+                       explicit_tile=True)
+
+
+def test_preflight_normal_derivation_passes():
+    # auto-derived blocks honor the SOFT budget (8 MiB), far under the
+    # hard limit — derivation never trips the admission check on its own
+    for shape in [(512, 512, 512), (96, 64, 384), (17, 34, 51)]:
+        derive_launch(shape, radius=1, n_fields=3, itemsize=4)
 
 
 def test_derive_launch_alignment_preferences():

@@ -1,0 +1,104 @@
+"""Property tests for the serve queue's ordering invariants.
+
+Two contracts the batch assembler leans on, checked over randomized
+schedules rather than hand-picked examples:
+
+* deadline expiry: a queue-expired ticket NEVER occupies a batch slot —
+  it fails with ``DeadlineExceeded`` — and the unexpired requests of a
+  bucket are served in strict submit (FIFO) order regardless of how the
+  expired ones interleave;
+* front-requeue: re-queuing an in-flight prefix (the worker-death path)
+  puts it ahead of everything waiting while preserving BOTH the
+  requeued tickets' relative order and the waiting tickets' relative
+  order.
+
+``hypothesis`` is an optional dependency (CI installs it; the minimal
+image may not) — the module skips cleanly when absent.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serve import errors  # noqa: E402
+from repro.serve.queue import RequestQueue, SolveRequest  # noqa: E402
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+FIELD = {"T": np.zeros((4, 4), np.float32)}
+
+
+def _submit(q, expired: bool) -> "Ticket":
+    # deadline_s=0.0 expires the instant it is queued; None never does
+    return q.submit(SolveRequest(fields=FIELD,
+                                 deadline_s=0.0 if expired else None))
+
+
+def _drain(q, max_batch: int) -> list:
+    batches = []
+    while True:
+        batch = q.take_batch(max_batch, timeout=0.0)
+        if not batch:
+            return batches
+        batches.append(batch)
+
+
+@settings(**SETTINGS)
+@given(expired_mask=st.lists(st.booleans(), min_size=1, max_size=24),
+       max_batch=st.integers(min_value=1, max_value=6))
+def test_expired_never_occupy_slots_and_fifo_survives(expired_mask,
+                                                      max_batch):
+    q = RequestQueue(capacity=64)
+    tickets = [_submit(q, expired) for expired in expired_mask]
+    served = [t for batch in _drain(q, max_batch) for t in batch]
+
+    unexpired = [t for t, e in zip(tickets, expired_mask) if not e]
+    expired = [t for t, e in zip(tickets, expired_mask) if e]
+
+    # every unexpired ticket served exactly once, in submit order
+    assert served == unexpired
+    # every expired ticket failed with the typed, located error
+    for t in expired:
+        assert t.done
+        with pytest.raises(errors.DeadlineExceeded) as ei:
+            t.result(timeout=0)
+        assert ei.value.request_id == t.request.request_id
+    # and the queue is fully drained
+    assert len(q) == 0
+
+
+@settings(**SETTINGS)
+@given(n_waiting=st.integers(min_value=0, max_value=12),
+       n_inflight=st.integers(min_value=1, max_value=12),
+       max_batch=st.integers(min_value=1, max_value=5))
+def test_front_requeue_preserves_both_orders(n_waiting, n_inflight,
+                                             max_batch):
+    q = RequestQueue(capacity=64)
+    inflight = [_submit(q, False) for _ in range(n_inflight)]
+    # a worker took the in-flight batch; these arrived while it ran
+    taken = q.take_batch(n_inflight, timeout=0.0)
+    assert taken == inflight
+    waiting = [_submit(q, False) for _ in range(n_waiting)]
+
+    q.requeue(inflight)     # the worker died
+
+    served = [t for batch in _drain(q, max_batch) for t in batch]
+    # requeued tickets come FIRST (they already waited once), in their
+    # original relative order; the waiting tickets follow, un-reordered
+    assert served == inflight + waiting
+
+
+@settings(**SETTINGS)
+@given(resolved_mask=st.lists(st.booleans(), min_size=1, max_size=10))
+def test_requeue_skips_resolved_tickets(resolved_mask):
+    q = RequestQueue(capacity=64)
+    inflight = [_submit(q, False) for _ in resolved_mask]
+    q.take_batch(len(inflight), timeout=0.0)
+    for t, done in zip(inflight, resolved_mask):
+        if done:
+            t.resolve({"ok": True})
+    q.requeue(inflight)
+    served = [t for batch in _drain(q, 4) for t in batch]
+    assert served == [t for t, done in zip(inflight, resolved_mask)
+                      if not done]

@@ -533,3 +533,67 @@ def test_solve_survives_flaky_telemetry_sink(tmp_path):
                                   np.asarray(clean.fields["T"]))
     assert col.dropped_records >= 1
     telemetry.reset()
+
+
+# ------------------------------------------------------------- rank merge
+def _write_rank_stream(path, spans, rank=None):
+    """Hand-rolled per-rank JSONL with controlled timestamps."""
+    with open(path, "w") as f:
+        for ts, name, dur in spans:
+            rec = {"kind": "span", "ts": ts, "name": name, "dur_s": dur}
+            if rank is not None:
+                rec["rank"] = rank
+            f.write(json.dumps(rec) + "\n")
+
+
+def test_merge_records_interleaves_by_timestamp(tmp_path):
+    # rank 0's records are rank-stamped; rank 1's rely on the
+    # rank_<i> filename fallback
+    p0 = str(tmp_path / "rank_0.jsonl")
+    p1 = str(tmp_path / "rank_1.jsonl")
+    _write_rank_stream(p0, [(1.0, "solve.chunk", 0.5),
+                            (3.0, "solve.chunk", 0.7)], rank=0)
+    _write_rank_stream(p1, [(2.0, "solve.chunk", 0.6),
+                            (4.0, "exchange", 0.1)])
+    merged = report.merge_records([p0, p1])
+    assert [r["ts"] for r in merged] == [1.0, 2.0, 3.0, 4.0]
+    assert [r["rank"] for r in merged] == [0, 1, 0, 1]
+
+    rows = report.per_rank_phase_summary(merged)
+    assert {(r["phase"], r["rank"], r["count"]) for r in rows} == {
+        ("solve.chunk", 0, 2), ("solve.chunk", 1, 1), ("exchange", 1, 1)}
+
+
+def test_report_cli_merge_glob(tmp_path, capsys):
+    p0 = str(tmp_path / "rank_0.jsonl")
+    p1 = str(tmp_path / "rank_1.jsonl")
+    _write_rank_stream(p0, [(1.0, "solve.chunk", 0.5)], rank=0)
+    _write_rank_stream(p1, [(2.0, "solve.chunk", 0.9)], rank=1)
+    assert report.main(["--merge", str(tmp_path / "rank_*.jsonl")]) == 0
+    out = capsys.readouterr().out
+    assert "Per-rank phases" in out
+    assert "ranks: [0, 1]" in out or "rank" in out
+    # one row per (phase, rank): the straggling rank is visible as its
+    # own 0.9 s row, not averaged into the other rank's 0.5 s
+    assert "0.9" in out and "0.5" in out
+
+
+def test_report_cli_merge_no_match_notice(tmp_path, capsys):
+    lone = str(tmp_path / "run.jsonl")
+    _write_rank_stream(lone, [(1.0, "solve.chunk", 0.5)])
+    rc = report.main([lone, "--merge", str(tmp_path / "nope_*.jsonl")])
+    assert rc == 0
+    err = capsys.readouterr().err
+    assert "no files match" in err
+
+
+def test_collector_rank_stamp(tmp_path):
+    path = str(tmp_path / "rank_3.jsonl")
+    col = telemetry.configure_rank(3, path=path)
+    col.count("steps", 2)
+    with col.span("solve.chunk"):
+        pass
+    col.close()
+    recs = schema.load_records(path)
+    assert recs and all(r.get("rank") == 3 for r in recs)
+    telemetry.reset()
