@@ -301,7 +301,11 @@ class FaultPlan:
     worker process after it completes N batches (circuit breaker +
     re-queue); ``batch_errors`` makes the next N batch executions
     raise :class:`TransientIOError` before touching the device (the
-    batch retry-with-backoff path)."""
+    batch retry-with-backoff path); ``wedge_worker_after`` stops the
+    worker cold after N completed batches — the process stays ALIVE but
+    never progresses or bumps its heartbeat again, the stale-heartbeat
+    (SIGKILL-and-replace) recovery path that an exit-code watcher alone
+    cannot see."""
 
     kill_at_step: Optional[int] = None
     hang_at_step: Optional[int] = None
@@ -315,6 +319,7 @@ class FaultPlan:
     nan_sample: int = 0
     reject_after: Optional[int] = None
     kill_worker_after: Optional[int] = None
+    wedge_worker_after: Optional[int] = None
     batch_errors: int = 0
     _saves_seen: int = dataclasses.field(default=0, repr=False)
     _killed: bool = dataclasses.field(default=False, repr=False)
@@ -430,11 +435,17 @@ class FaultPlan:
 
     def worker_batch_done(self) -> None:
         """Called by the worker after each completed batch; dies when
-        the scheduled batch count is reached (worker-kill injection)."""
+        the scheduled batch count is reached (worker-kill injection),
+        or wedges — alive but never progressing or heartbeating again,
+        so only staleness detection can recover the worker."""
         self._batches_done += 1
         if (self.kill_worker_after is not None
                 and self._batches_done >= self.kill_worker_after):
             os._exit(KILL_EXIT_CODE)
+        if (self.wedge_worker_after is not None
+                and self._batches_done >= self.wedge_worker_after):
+            while True:
+                time.sleep(60)
 
     def after_save(self, ckpt_dir: str) -> None:
         """Called after each completed checkpoint write with its final

@@ -14,8 +14,13 @@ heartbeat -> SIGKILL), its claimed-but-unfinished request files are
 renamed back into ``pending/`` — their original sequence prefix puts
 them at the FRONT of the sorted backlog, so recovery never reorders the
 waiting requests — and a replacement worker is spawned (up to
-``max_worker_restarts``). Zero requests are lost; each resolves with a
-result file or a typed error file.
+``max_worker_restarts``). The dead incarnation's heartbeat file is
+retired before the respawn: a replacement starts with NO liveness file
+and is not judged stale until after its own first bump, so the seconds
+of interpreter/jax startup (and first-request compile) can never be
+mistaken for a wedge by the leftover, already-stale file of the worker
+it replaces. Zero requests are lost; each resolves with a result file
+or a typed error file.
 """
 from __future__ import annotations
 
@@ -25,6 +30,7 @@ import subprocess
 import sys
 import threading
 import time
+import traceback
 import uuid
 from typing import Optional
 
@@ -63,10 +69,14 @@ class ProcTicket:
                     f"request {self.request_id!r} failed in worker "
                     f"{detail.get('rank')}: {detail.get('error')}: "
                     f"{detail.get('detail')}")
-            if self._pool.failed:
+            # failed means ONE rank exhausted its restarts; surviving
+            # workers keep draining the spool and may still serve this
+            # request — only give up once nobody is left to serve it
+            if self._pool.failed and not self._pool._procs:
                 raise WorkerDied(self.request_id,
                                  f"request {self.request_id!r} unserved: "
-                                 "pool exhausted its worker restarts")
+                                 "pool exhausted its worker restarts and "
+                                 "no live workers remain")
             if deadline is not None and time.monotonic() > deadline:
                 raise TimeoutError(
                     f"request {self.request_id!r} not done in {timeout}s")
@@ -153,34 +163,58 @@ class ProcessWorkerPool:
                 continue
         return n
 
+    def _retire_heartbeat(self, hb: fault.Heartbeat, rank: int) -> None:
+        """Remove a dead incarnation's liveness file (and any torn tmp).
+        Without this, the leftover file — already older than
+        ``heartbeat_timeout_s`` — would condemn the freshly spawned
+        replacement before it finishes interpreter startup, and the
+        watcher would kill-loop replacements until the restart budget
+        was gone."""
+        for path in (hb.path(rank), hb.path(rank) + ".tmp"):
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
+
+    def _watch_once(self, hb: fault.Heartbeat) -> bool:
+        """One supervision sweep; True when the drain is complete."""
+        for rank, proc in list(self._procs.items()):
+            rc = proc.poll()
+            stale = (rc is None and heartbeat_ages(hb).get(rank, 0.0)
+                     > self.heartbeat_timeout_s)
+            if rc is None and not stale:
+                continue
+            if stale:
+                kill_process(proc, self.grace_s)
+            self._retire_heartbeat(hb, rank)
+            if self._closed and proc.returncode == 0:
+                del self._procs[rank]   # clean drain exit
+                continue
+            self.recovered += self._recover_claims(rank)
+            if self.restarts >= self.max_worker_restarts:
+                self.failed = True
+                del self._procs[rank]
+                continue
+            self.restarts += 1
+            # injected fault plans are one-shot: the replacement
+            # worker must not inherit the schedule that killed it
+            self.env.pop(fault.PLAN_ENV, None)
+            self._spawn(rank)
+        return self._closed and not self._procs
+
     def _watch(self) -> None:
         hb = fault.Heartbeat(self.heartbeat_dir,
                              timeout_s=self.heartbeat_timeout_s,
                              run_id=self.run_id)
         while not self._stop.is_set():
-            for rank, proc in list(self._procs.items()):
-                rc = proc.poll()
-                stale = (rc is None and heartbeat_ages(hb).get(rank, 0.0)
-                         > self.heartbeat_timeout_s)
-                if rc is None and not stale:
-                    continue
-                if stale:
-                    kill_process(proc, self.grace_s)
-                if self._closed and proc.returncode == 0:
-                    del self._procs[rank]   # clean drain exit
-                    continue
-                self.recovered += self._recover_claims(rank)
-                if self.restarts >= self.max_worker_restarts:
-                    self.failed = True
-                    del self._procs[rank]
-                    continue
-                self.restarts += 1
-                # injected fault plans are one-shot: the replacement
-                # worker must not inherit the schedule that killed it
-                self.env.pop(fault.PLAN_ENV, None)
-                self._spawn(rank)
-            if self._closed and not self._procs:
-                return
+            try:
+                if self._watch_once(hb):
+                    return
+            except Exception:   # supervision must not die silently: an
+                # unexpected error (e.g. a filesystem hiccup outside the
+                # handled paths) is logged and the next sweep retries
+                sys.stderr.write("pool-supervisor: sweep failed "
+                                 "(continuing)\n" + traceback.format_exc())
             time.sleep(self.poll_s)
 
     def close(self, timeout: Optional[float] = 60.0) -> None:

@@ -21,10 +21,15 @@ files (the spool survives a dead worker by construction):
     sorted-name order — recovery never reorders the unexpired backlog).
 
 Liveness: the worker bumps a run-id-namespaced
-:class:`~repro.distributed.fault.Heartbeat` every loop (idle included),
-so a stale heartbeat always means wedged, not idle.
-``FaultPlan.kill_worker_after`` dies after N completed requests — the
-injection the pool's recovery test drives.
+:class:`~repro.distributed.fault.Heartbeat` every loop (idle included)
+AND between solve chunks — a claimed request is solved in
+adaptively-sized blocks of ``check_every`` iterations with a bump at
+every block boundary, so a legitimately long solve keeps beating and a
+stale heartbeat always means wedged, never busy or idle.
+``FaultPlan.kill_worker_after`` dies after N completed requests;
+``wedge_worker_after`` stops progressing (and bumping) while staying
+alive — the injections the pool's exit-code and stale-heartbeat
+recovery tests drive.
 """
 from __future__ import annotations
 
@@ -113,14 +118,59 @@ def _claim(pending: str, claimed: str) -> Optional[str]:
     return None
 
 
+def _solve_beating(kernel, fields: dict, meta: dict, hb, served: int, *,
+                   chunk_target_s: float = 1.0):
+    """Solve one request in heartbeat-sized chunks.
+
+    Each chunk is the same cached jitted while_loop as a plain
+    ``solve_until`` call, capped at a multiple of ``check_every`` — the
+    per-step math never sees the chunk boundary, so the result is
+    bit-identical to the unchunked solve. Between chunks the worker's
+    heartbeat is bumped, so a request whose solve outlasts the pool's
+    ``heartbeat_timeout_s`` is not killed as wedged, requeued, and
+    killed again (a poison-pill livelock). The chunk size starts at one
+    check and doubles while chunks complete faster than
+    ``chunk_target_s``, keeping the host-sync overhead negligible on
+    long solves. Returns ``(fields, total_iters, err)``.
+    """
+    from ..core import iterate
+
+    scalars = meta.get("scalars") or {}
+    tol = float(meta.get("tol", 0.0))
+    max_iters = int(meta.get("max_iters", 100))
+    check_every = int(meta.get("check_every", 1))
+    if hb is None or max_iters <= check_every:
+        res = iterate.solve_until(kernel, fields, scalars, tol=tol,
+                                  max_iters=max_iters,
+                                  check_every=check_every)
+        return res.fields, int(res.iters), float(res.err)
+    cur, done, err = dict(fields), 0, float("inf")
+    chunk = check_every
+    while done < max_iters:
+        hb.bump(served)
+        take = min(chunk, max_iters - done)
+        t0 = time.perf_counter()
+        res = iterate.solve_until(kernel, cur, scalars, tol=tol,
+                                  max_iters=take, check_every=check_every)
+        dt = time.perf_counter() - t0
+        cur, err = res.fields, float(res.err)
+        done += int(res.iters)
+        hb.bump(served)
+        if int(res.iters) < take or iterate._crossed(err, tol, "below"):
+            break
+        if dt < chunk_target_s:
+            chunk *= 2
+        elif dt > 2 * chunk_target_s and chunk > check_every:
+            chunk = max(check_every, chunk // 2)
+    return cur, done, err
+
+
 def serve_spool(spool: str, kernel, *, rank: int = 0,
                 run_id: Optional[str] = None,
                 heartbeat_dir: Optional[str] = None,
                 idle_sleep_s: float = 0.02) -> int:
     """The worker loop: claim -> solve -> publish, until the pool drops
     the ``CLOSED`` marker and the backlog drains."""
-    from ..core import iterate
-
     pending = os.path.join(spool, "pending")
     claimed = os.path.join(spool, "claimed", f"rank_{rank}")
     done = os.path.join(spool, "done")
@@ -142,15 +192,10 @@ def serve_spool(spool: str, kernel, *, rank: int = 0,
         name = os.path.basename(path)
         try:
             fields, meta = read_request(path)
-            res = iterate.solve_until(
-                kernel, fields, meta.get("scalars") or {},
-                tol=float(meta.get("tol", 0.0)),
-                max_iters=int(meta.get("max_iters", 100)),
-                check_every=int(meta.get("check_every", 1)))
-            out = {k: np.asarray(v) for k, v in res.fields.items()}
+            cur, iters, err = _solve_beating(kernel, fields, meta, hb, served)
+            out = {k: np.asarray(v) for k, v in cur.items()}
             write_result(os.path.join(done, name), out,
-                         {"iters": int(res.iters), "err": float(res.err),
-                          "rank": rank})
+                         {"iters": iters, "err": err, "rank": rank})
         except Exception as e:  # typed failure file — the request is
             # answered, never lost silently
             err = {"error": type(e).__name__, "detail": str(e)[:500],

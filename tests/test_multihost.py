@@ -248,6 +248,46 @@ def test_process_pool_survives_worker_kills(tmp_path):
                                    atol=1e-6)
 
 
+@pytest.mark.multihost
+@pytest.mark.distributed
+def test_process_pool_recovers_wedged_worker_without_kill_loop(tmp_path):
+    """The stale-heartbeat recovery path (not exit codes): a worker that
+    WEDGES — alive but never bumping again — is SIGKILLed and its
+    heartbeat file retired before the respawn. The replacement needs
+    seconds of startup before its first bump; the dead incarnation's
+    leftover file (still older than the timeout) must not condemn it,
+    or the watcher kill-loops replacements until the restart budget is
+    gone and the backlog is abandoned."""
+    from repro.core import iterate
+    from repro.serve.pool import ProcessWorkerPool
+    from repro.serve.procworker import demo_kernel
+
+    n = 10
+    rng = np.random.RandomState(7)
+    inits = [np.asarray(rng.rand(n, n, n), np.float32) for _ in range(3)]
+
+    # the single first-generation worker serves ONE request, then wedges
+    plan = fault.FaultPlan(wedge_worker_after=1)
+    pool = ProcessWorkerPool(
+        str(tmp_path / "spool"), workers=1, heartbeat_timeout_s=10.0,
+        max_worker_restarts=2, env={fault.PLAN_ENV: plan.to_env()})
+    with pool:
+        tickets = [pool.submit({"T2": a, "T": a}, {"dt": 1e-3},
+                               tol=0.0, max_iters=8, check_every=4)
+                   for a in inits]
+        results = [t.result(timeout=150.0) for t in tickets]
+    assert pool.restarts >= 1
+    assert not pool.failed, "replacement was kill-looped by the stale file"
+
+    kern = demo_kernel()
+    for a, (fields, meta) in zip(inits, results):
+        ref = iterate.solve_until(kern, {"T2": a, "T": a}, {"dt": 1e-3},
+                                  tol=0.0, max_iters=8, check_every=4)
+        assert meta["iters"] == 8
+        np.testing.assert_allclose(fields["T"], np.asarray(ref.fields["T"]),
+                                   atol=1e-6)
+
+
 # ---------------------------------------------------------------------------
 # launcher CLI (the README runbook path)
 # ---------------------------------------------------------------------------
